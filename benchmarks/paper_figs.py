@@ -1,0 +1,189 @@
+"""One benchmark per paper figure/table.  Each function prints CSV rows
+(`name,us_per_call,derived`) and returns a dict of derived metrics.
+
+Fig.1  — throughput + energy rooflines of the Edge TPU across all 24 models.
+Fig.2  — energy breakdown during inference (per family, per component).
+Fig.3  — layer parameter footprint vs FLOP/B (per family scatter stats).
+Fig.4/5— MAC count and footprint variation across layers of four CNNs.
+Fig.6  — layer clustering (footprint vs FLOP/B vs MACs, cluster populations).
+Fig.10 — inference energy for Baseline / Base+HB / EyerissV2 / Mensa + Mensa
+         per-accelerator energy breakdown.
+Fig.11 — utilization and throughput, normalized to Baseline.
+Fig.12 — inference latency, normalized to Baseline.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import Counter, defaultdict
+
+from repro.core import (EDGE_TPU, DEFAULT_ENERGY, characterize_model,
+                        characterize_zoo, cluster_all, evaluate_zoo,
+                        monolithic_cost, rule_cluster, strict_fraction,
+                        summarize, variation_report)
+from repro.edge import edge_zoo
+
+MB = 1024 * 1024
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def fig1_rooflines(emit=print) -> dict:
+    """Edge TPU throughput roofline (2 TFLOP/s knee at AI=peak/bw) and energy
+    roofline, with each model's operating point."""
+    zoo = edge_zoo()
+    ep = DEFAULT_ENERGY
+    peak = EDGE_TPU.peak_flops
+    bw = EDGE_TPU.dram_bw
+    knee = peak / bw                      # FLOP/B where compute == memory
+    rows = []
+    for g in zoo:
+        sc = monolithic_cost(g, EDGE_TPU)
+        traffic = sum(c.prof.offchip_bytes for c in sc.per_layer)
+        ai = sc.flops / max(traffic, 1.0)
+        roof = min(peak, ai * bw)
+        attained = sc.throughput_flops
+        # energy roofline (Choi et al. [8]): eff(AI) = 1/(e_flop + e_dram/AI)
+        eff_max = 1.0 / (ep.e_flop + ep.e_dram_lpddr4 / ai)
+        eff = sc.efficiency_flops_per_j
+        rows.append((g.name, ai, attained / roof, attained / peak,
+                     eff / eff_max))
+    util = sum(r[3] for r in rows) / len(rows)
+    e_frac = sum(r[4] for r in rows) / len(rows)
+    (out, us) = _timed(lambda: rows)
+    emit(f"fig1_rooflines,{us:.1f},knee_flopb={knee:.1f};mean_util={util:.3f};"
+         f"mean_energy_roofline_frac={e_frac:.3f}")
+    for name, ai, roof_frac, peak_frac, ef in rows:
+        emit(f"fig1.{name},0.0,AI={ai:.1f};roof_frac={roof_frac:.3f};"
+             f"peak_frac={peak_frac:.4f};energy_frac={ef:.3f}")
+    return {"mean_util": util, "mean_energy_frac": e_frac, "rows": rows}
+
+
+def fig2_energy_breakdown(emit=print) -> dict:
+    zoo = edge_zoo()
+    fam_tot = defaultdict(lambda: defaultdict(float))
+    for g in zoo:
+        sc = monolithic_cost(g, EDGE_TPU)
+        e = sc.energy
+        t = fam_tot[g.family]
+        t["pe"] += e.pe
+        t["buf_param"] += e.buf_param_dynamic
+        t["buf_act"] += e.buf_act_dynamic
+        t["noc"] += e.noc
+        t["dram"] += e.dram
+        t["static"] += e.static
+    out = {}
+    for fam, t in fam_tot.items():
+        tot = sum(t.values())
+        shares = {k: v / tot for k, v in t.items()}
+        out[fam] = shares
+        emit(f"fig2.{fam},0.0," + ";".join(f"{k}={v:.3f}"
+                                           for k, v in shares.items()))
+    # headline claims
+    all_t = defaultdict(float)
+    for t in fam_tot.values():
+        for k, v in t.items():
+            all_t[k] += v
+    tot = sum(all_t.values())
+    offchip = all_t["dram"] / tot
+    onchip = (all_t["buf_param"] + all_t["noc"]) / tot
+    emit(f"fig2.overall,0.0,offchip_param_share={offchip:.3f}(paper~0.503);"
+         f"onchip_param_share={onchip:.3f}(paper~0.309)")
+    out["overall"] = {"offchip": offchip, "onchip": onchip}
+    return out
+
+
+def fig3_footprint_vs_flopb(emit=print) -> dict:
+    chars = characterize_zoo(edge_zoo())
+    by_fam = defaultdict(list)
+    for c in chars:
+        if c.param_bytes > 256:
+            by_fam[c.model.split("_")[0][:3]].append(c)
+    lstm_tr = [c for c in chars
+               if c.recurrent and c.param_bytes > 256]
+    avg_foot = sum(c.param_bytes for c in lstm_tr) / len(lstm_tr) / MB
+    emit(f"fig3,0.0,lstm_tr_avg_layer_footprint_mb={avg_foot:.1f}(paper 33.4);"
+         f"n_layers={len(chars)}")
+    return {"avg_footprint_mb": avg_foot}
+
+
+def fig4_5_layer_variation(emit=print) -> dict:
+    zoo = [g for g in edge_zoo() if g.family == "cnn"][:4]
+    out = {}
+    for g in zoo:
+        chars = [c for c in characterize_model(g) if c.macs > 0
+                 and c.param_bytes > 1]
+        macs = [c.macs for c in chars]
+        foot = [c.param_bytes for c in chars]
+        mac_x = max(macs) / max(min(macs), 1)
+        foot_x = max(foot) / max(min(foot), 1)
+        out[g.name] = (mac_x, foot_x)
+        emit(f"fig4_5.{g.name},0.0,mac_variation_x={mac_x:.0f}(paper~200);"
+             f"footprint_variation_x={foot_x:.0f}(paper~20)")
+    return out
+
+
+def fig6_clusters(emit=print) -> dict:
+    chars = characterize_zoo(edge_zoo())
+    assignments = cluster_all(chars)
+    pops = Counter(a.cluster for a in assignments)
+    s1 = strict_fraction(chars, pad=1.0)
+    s25 = strict_fraction(chars, pad=2.5)
+    emit(f"fig6,0.0,populations={dict(sorted(pops.items()))};"
+         f"in_box_frac_pad1={s1:.3f};in_box_frac_pad2.5={s25:.3f}(paper 0.97)")
+    return {"populations": dict(pops), "strict": s1, "padded": s25}
+
+
+def fig10_11_12_mensa_vs_baselines(emit=print) -> dict:
+    zoo = edge_zoo()
+    results = evaluate_zoo(zoo)
+    s = summarize(results)
+    paper = dict(energy_reduction_vs_baseline=0.660, energy_eff_x_vs_baseline=3.0,
+                 energy_eff_x_vs_eyeriss=2.4, throughput_x_vs_baseline=3.1,
+                 throughput_x_vs_base_hb=1.3, throughput_x_vs_eyeriss=4.3,
+                 latency_x_vs_baseline=1.96, latency_x_vs_base_hb=1.17,
+                 base_hb_energy_reduction=0.075, base_hb_throughput_x=2.5,
+                 baseline_mean_utilization=0.273,
+                 lstm_transducer_throughput_x=5.7,
+                 lstm_transducer_baseline_util=0.01)
+    for k, v in s.__dict__.items():
+        emit(f"fig10_11_12.{k},0.0,ours={v:.3f};paper={paper.get(k, float('nan')):.3f}")
+    # per-model energy + latency normalized to baseline (Fig 10/12 bars)
+    for r in results:
+        emit(f"fig10.{r.model},0.0,"
+             f"base_hb={r.base_hb.energy.total / r.baseline.energy.total:.3f};"
+             f"eyeriss={r.eyeriss.energy.total / r.baseline.energy.total:.3f};"
+             f"mensa={r.mensa.energy.total / r.baseline.energy.total:.3f}")
+        emit(f"fig12.{r.model},0.0,"
+             f"latency_mensa_x={r.baseline.latency_s / r.mensa.latency_s:.2f}")
+    # Mensa per-accelerator energy breakdown (Fig 10 right)
+    accel_e = defaultdict(float)
+    for r in results:
+        for lc in r.mensa.per_layer:
+            accel_e[lc.accelerator] += lc.energy.total
+    tot = sum(accel_e.values())
+    emit("fig10.accel_breakdown,0.0," + ";".join(
+        f"{k}={v / tot:.3f}" for k, v in sorted(accel_e.items())))
+    return {"summary": s.__dict__, "accel_breakdown": dict(accel_e)}
+
+
+ALL_FIGS = [fig1_rooflines, fig2_energy_breakdown, fig3_footprint_vs_flopb,
+            fig4_5_layer_variation, fig6_clusters, fig10_11_12_mensa_vs_baselines]
+
+
+def run_all(emit=print) -> dict:
+    out = {}
+    for fn in ALL_FIGS:
+        t0 = time.perf_counter()
+        out[fn.__name__] = fn(emit)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"{fn.__name__},{us:.1f},done")
+    return out
+
+
+if __name__ == "__main__":
+    run_all()

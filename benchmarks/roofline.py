@@ -1,0 +1,146 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Roofline analysis (assignment §ROOFLINE): per (arch x shape) on the
+# single-pod mesh, derive the three terms from the compiled dry-run artifact:
+#
+#   compute term    = HLO_FLOPs / (chips x 197e12)          [bf16 peak]
+#   memory term     = HLO_bytes / (chips x 819e9)           [HBM]
+#   collective term = collective_wire_bytes / (chips x 50e9) [ICI]
+#
+# XLA's HloCostAnalysis counts while-loop bodies ONCE, so the roofline pass
+# recompiles each cell with every scan unrolled (cfg.unroll_scans) and
+# grad-accum=1 — loop-free HLO whose cost analysis is exact.  The standard
+# (scan-based) dry-run remains the source of the memory-fit numbers.
+#
+#   PYTHONPATH=src python -m benchmarks.roofline --cell smollm-135m:train_4k
+#   PYTHONPATH=src python -m benchmarks.roofline --all
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config
+from repro.utils.hlo import parse_collectives
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "roofline"
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+# per-cell overrides for the unrolled compile (keep HLO size manageable)
+UNROLL_BLOCK_KV = {"prefill_32k": 2048, "train_4k": 1024}
+UNROLL_CHUNK = {"train_4k": 1024, "prefill_32k": 2048}
+
+
+def run_cell(arch: str, shape_name: str, out_dir: Path = RESULTS,
+             variant: str = "baseline", cfg_override=None,
+             accum: int = 1, strategy: str = "tp") -> dict:
+    from repro.launch import dryrun as dr
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "variant": variant}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    out_path = out_dir / f"{arch}__{shape_name}{suffix}.json"
+    if not ok:
+        rec.update(status="skip", reason=why)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    cfg = cfg.replace(
+        unroll_scans=True,
+        attn_block_kv=UNROLL_BLOCK_KV.get(shape_name, cfg.attn_block_kv),
+        scan_chunk=UNROLL_CHUNK.get(shape_name, cfg.scan_chunk))
+    if cfg_override:
+        cfg = cfg_override(cfg)
+    mesh = make_production_mesh(multi_pod=False)
+    saved_accum = dict(dr.ACCUM)
+    dr.ACCUM.clear()
+    dr.ACCUM.update({"default": accum})
+    t0 = time.time()
+    try:
+        fn, args, _, meta = dr.build_lowerable(cfg, shape, mesh, strategy)
+        with mesh:
+            lowered = jax.jit(fn).lower(*args)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = parse_collectives(hlo, default_group=256)
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        wire_dev = coll.total_wire_bytes
+
+        t_compute = flops_dev / PEAK_FLOPS
+        t_memory = bytes_dev / HBM_BW
+        t_collective = wire_dev / ICI_BW
+        terms = {"compute_s": t_compute, "memory_s": t_memory,
+                 "collective_s": t_collective}
+        dominant = max(terms, key=terms.get)
+
+        # MODEL_FLOPS: 6*N*D for training, 2*N_active*D for inference fwd
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        n_active = cfg.param_count(active_only=True)
+        model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+        model_flops_dev = model_flops / 256
+
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            flops_per_dev=flops_dev, bytes_per_dev=bytes_dev,
+            coll_wire_per_dev=wire_dev,
+            collectives=coll.to_dict(),
+            terms=terms, dominant=dominant,
+            bound_s=max(terms.values()),
+            model_flops_per_dev=model_flops_dev,
+            useful_ratio=model_flops_dev / max(flops_dev, 1.0),
+            roofline_fraction=(model_flops_dev / PEAK_FLOPS)
+            / max(max(terms.values()), 1e-30),
+        )
+        print(f"[roofline] {arch} x {shape_name} ({variant}): "
+              f"C={t_compute*1e3:.2f}ms M={t_memory*1e3:.2f}ms "
+              f"X={t_collective*1e3:.2f}ms dom={dominant[:-2]} "
+              f"useful={rec['useful_ratio']:.2f} "
+              f"roofline_frac={rec['roofline_fraction']:.3f}")
+    except Exception as e:  # noqa: BLE001
+        import traceback
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-3000:])
+        print(f"[roofline] {arch} x {shape_name}: ERROR {e}")
+    finally:
+        dr.ACCUM.clear()
+        dr.ACCUM.update(saved_accum)
+    out_path.write_text(json.dumps(rec, indent=1, default=float))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", help="arch:shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                p = RESULTS / f"{arch}__{shape}.json"
+                if args.skip_done and p.exists() and \
+                        json.loads(p.read_text()).get("status") in ("ok", "skip"):
+                    continue
+                run_cell(arch, shape)
+    else:
+        arch, shape = args.cell.split(":")
+        run_cell(arch, shape)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Mensa core: layer characterization, clustering, heterogeneous-accelerator cost
+models, and the two-phase scheduler (paper §3-§5), plus the TPU-level execution
+strategy layer (DESIGN.md §2 Level B)."""
+from .accelerators import (BASE_HB, CLUSTER_TO_ACCELERATOR, EDGE_TPU, EYERISS_V2,
+                           JACQUARD, MENSA_ACCELERATORS, PASCAL, PAVLOV,
+                           AcceleratorConfig, by_name)
+from .characterize import (LayerCharacteristics, characterize_layer,
+                           characterize_model, characterize_zoo, variation_report)
+from .clustering import (ClusterAssignment, agreement, cluster_all, kmeans_cluster,
+                         rule_cluster, strict_fraction)
+from .costmodel import LayerCost, ScheduleCost, layer_cost, monolithic_cost, \
+    schedule_cost
+from .energy import DEFAULT_ENERGY, EnergyBreakdown, EnergyParams
+from .layerspec import LayerKind, LayerSpec, ModelGraph
+from .mensa import ModelResult, ZooSummary, evaluate_model, evaluate_zoo, summarize
+from .scheduler import MensaSchedule, MensaScheduler
+
+__all__ = [
+    "AcceleratorConfig", "BASE_HB", "CLUSTER_TO_ACCELERATOR", "EDGE_TPU",
+    "EYERISS_V2", "JACQUARD", "MENSA_ACCELERATORS", "PASCAL", "PAVLOV", "by_name",
+    "LayerCharacteristics", "characterize_layer", "characterize_model",
+    "characterize_zoo", "variation_report",
+    "ClusterAssignment", "agreement", "cluster_all", "kmeans_cluster",
+    "rule_cluster", "strict_fraction",
+    "LayerCost", "ScheduleCost", "layer_cost", "monolithic_cost", "schedule_cost",
+    "DEFAULT_ENERGY", "EnergyBreakdown", "EnergyParams",
+    "LayerKind", "LayerSpec", "ModelGraph",
+    "ModelResult", "ZooSummary", "evaluate_model", "evaluate_zoo", "summarize",
+    "MensaSchedule", "MensaScheduler",
+]

@@ -1,0 +1,88 @@
+"""Accelerator configurations — §3 baseline + §5 Mensa designs + §7 comparison points.
+
+All design points come straight from the paper:
+  * Baseline Edge TPU: 64x64 PEs, 2 TFLOP/s peak, 4 MB param + 2 MB act buffers,
+    LPDDR4 (32 GB/s).
+  * Base+HB: Baseline with 8x bandwidth (256 GB/s).
+  * Eyeriss v2: 384 PEs, 192 kB buffers, row-stationary flexible NoC, LPDDR4.
+  * Pascal:   32x32 PEs @ 2 TFLOP/s, 128 kB param + 256 kB act, on-chip, LPDDR4.
+  * Pavlov:   8x8 PEs @ 128 GFLOP/s, 512 B/PE param RF + 128 kB act, near-data (256 GB/s).
+  * Jacquard: 16x16 PEs @ 512 GFLOP/s, 128 kB param + 128 kB act, near-data (256 GB/s).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+KB = 1024
+MB = 1024 * 1024
+GB = 1024 ** 3
+
+
+@dataclass(frozen=True)
+class AcceleratorConfig:
+    name: str
+    pe_rows: int
+    pe_cols: int
+    peak_flops: float              # FLOP/s
+    param_buf_bytes: float
+    act_buf_bytes: float
+    dram_bw: float                 # bytes/s available to this accelerator
+    dram_kind: str                 # "lpddr4" | "hbm_internal"
+    dataflow: str                  # "output_stationary" | "pascal" | "pavlov"
+                                   # | "jacquard" | "row_stationary"
+    near_data: bool = False
+    dram_latency_s: float = 100e-9  # exposed per dependent fetch
+
+    @property
+    def n_pes(self) -> int:
+        return self.pe_rows * self.pe_cols
+
+    @property
+    def freq_hz(self) -> float:
+        # peak = n_pes * 2 FLOP/cycle * freq
+        return self.peak_flops / (2 * self.n_pes)
+
+
+EDGE_TPU = AcceleratorConfig(
+    name="baseline", pe_rows=64, pe_cols=64, peak_flops=2e12,
+    param_buf_bytes=4 * MB, act_buf_bytes=2 * MB,
+    dram_bw=32e9, dram_kind="lpddr4", dataflow="output_stationary")
+
+BASE_HB = AcceleratorConfig(
+    name="base_hb", pe_rows=64, pe_cols=64, peak_flops=2e12,
+    param_buf_bytes=4 * MB, act_buf_bytes=2 * MB,
+    dram_bw=256e9, dram_kind="lpddr4", dataflow="output_stationary")
+
+EYERISS_V2 = AcceleratorConfig(
+    name="eyeriss_v2", pe_rows=16, pe_cols=24, peak_flops=307.2e9,
+    param_buf_bytes=96 * KB, act_buf_bytes=96 * KB,
+    dram_bw=32e9, dram_kind="lpddr4", dataflow="row_stationary")
+
+PASCAL = AcceleratorConfig(
+    name="pascal", pe_rows=32, pe_cols=32, peak_flops=2e12,
+    param_buf_bytes=128 * KB, act_buf_bytes=256 * KB,
+    dram_bw=32e9, dram_kind="lpddr4", dataflow="pascal")
+
+PAVLOV = AcceleratorConfig(
+    name="pavlov", pe_rows=8, pe_cols=8, peak_flops=128e9,
+    param_buf_bytes=64 * 512, act_buf_bytes=128 * KB,   # 512 B private RF per PE
+    dram_bw=256e9, dram_kind="hbm_internal", dataflow="pavlov",
+    near_data=True, dram_latency_s=40e-9)
+
+JACQUARD = AcceleratorConfig(
+    name="jacquard", pe_rows=16, pe_cols=16, peak_flops=512e9,
+    param_buf_bytes=128 * KB, act_buf_bytes=128 * KB,
+    dram_bw=256e9, dram_kind="hbm_internal", dataflow="jacquard",
+    near_data=True, dram_latency_s=40e-9)
+
+MENSA_ACCELERATORS = (PASCAL, PAVLOV, JACQUARD)
+
+# cluster -> designated Mensa accelerator (paper §5.2)
+CLUSTER_TO_ACCELERATOR = {1: PASCAL, 2: PASCAL, 3: PAVLOV, 4: JACQUARD, 5: JACQUARD}
+
+
+def by_name(name: str) -> AcceleratorConfig:
+    for a in (EDGE_TPU, BASE_HB, EYERISS_V2, PASCAL, PAVLOV, JACQUARD):
+        if a.name == name:
+            return a
+    raise KeyError(name)

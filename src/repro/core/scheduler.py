@@ -1,0 +1,116 @@
+"""The Mensa two-phase runtime scheduler (§4.2).
+
+Phase 1 — isolation mapping: each layer goes to the accelerator designated for
+its cluster (driver configuration knowledge: cluster characteristics + which
+accelerator serves which cluster).  A cost-based mode (`policy="cost"`) instead
+argmins an energy-delay product per layer, which is useful for ablations.
+
+Phase 2 — communication-aware remap: walking the DAG in topological order, if a
+layer's phase-1 accelerator differs from its predecessor's, compare
+  (a) keep: transfer cost (DRAM round-trip of the edge activation) + layer cost
+      on its optimal accelerator, vs.
+  (b) move: layer cost on the predecessor's accelerator (no transfer).
+and remap the layer when (b) is cheaper.  Cost = energy-delay product, the same
+heuristic currency as phase 1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .accelerators import (AcceleratorConfig, CLUSTER_TO_ACCELERATOR,
+                           MENSA_ACCELERATORS)
+from .characterize import characterize_model
+from .clustering import rule_cluster
+from .costmodel import layer_cost, schedule_cost, ScheduleCost
+from .energy import DEFAULT_ENERGY, EnergyParams
+from .layerspec import ModelGraph
+
+
+@dataclass
+class MensaSchedule:
+    model: str
+    mapping: list[AcceleratorConfig]
+    clusters: list[int]
+    phase1_mapping: list[AcceleratorConfig]
+    n_remapped: int = 0
+
+    def accelerator_names(self) -> list[str]:
+        return [a.name for a in self.mapping]
+
+
+def _edp(latency_s: float, energy_j: float) -> float:
+    return latency_s * energy_j
+
+
+class MensaScheduler:
+    """Schedules a ModelGraph onto a set of heterogeneous accelerators."""
+
+    def __init__(self, accelerators: tuple[AcceleratorConfig, ...] = MENSA_ACCELERATORS,
+                 cluster_map: dict[int, AcceleratorConfig] | None = None,
+                 energy: EnergyParams = DEFAULT_ENERGY,
+                 policy: str = "cluster"):
+        self.accelerators = accelerators
+        self.cluster_map = cluster_map or dict(CLUSTER_TO_ACCELERATOR)
+        self.energy = energy
+        if policy not in ("cluster", "cost"):
+            raise ValueError(policy)
+        self.policy = policy
+
+    # ------------------------------------------------------------- phase 1
+    def phase1(self, graph: ModelGraph) -> tuple[list[AcceleratorConfig], list[int]]:
+        chars = characterize_model(graph)
+        clusters = [rule_cluster(c).cluster for c in chars]
+        mapping: list[AcceleratorConfig] = []
+        for spec, cl in zip(graph.layers, clusters):
+            if self.policy == "cluster":
+                acc = self.cluster_map[cl]
+                if acc not in self.accelerators:          # restricted systems
+                    acc = self._best_by_cost(spec)
+            else:
+                acc = self._best_by_cost(spec)
+            mapping.append(acc)
+        return mapping, clusters
+
+    def _best_by_cost(self, spec) -> AcceleratorConfig:
+        best, best_c = None, float("inf")
+        for acc in self.accelerators:
+            c = layer_cost(spec, acc, self.energy)
+            v = _edp(c.latency_s, c.energy.total)
+            if v < best_c:
+                best, best_c = acc, v
+        assert best is not None
+        return best
+
+    # ------------------------------------------------------------- phase 2
+    def phase2(self, graph: ModelGraph,
+               mapping: list[AcceleratorConfig]) -> tuple[list[AcceleratorConfig], int]:
+        ep = self.energy
+        out = list(mapping)
+        n_moved = 0
+        for (s, d) in graph.edges:
+            if out[s].name == out[d].name:
+                continue
+            spec_d = graph.layers[d]
+            edge_bytes = graph.layers[s].out_act_bytes
+            bw = min(out[s].dram_bw, out[d].dram_bw)
+            t_xfer = 2 * edge_bytes / bw
+            e_xfer = edge_bytes * (ep.e_dram(out[s].dram_kind)
+                                   + ep.e_dram(out[d].dram_kind))
+            c_keep = layer_cost(spec_d, out[d], ep)
+            c_move = layer_cost(spec_d, out[s], ep)
+            keep = _edp(c_keep.latency_s + t_xfer, c_keep.energy.total + e_xfer)
+            move = _edp(c_move.latency_s, c_move.energy.total)
+            if move < keep:
+                out[d] = out[s]
+                n_moved += 1
+        return out, n_moved
+
+    # ------------------------------------------------------------- driver
+    def schedule(self, graph: ModelGraph) -> MensaSchedule:
+        p1, clusters = self.phase1(graph)
+        p2, moved = self.phase2(graph, p1)
+        return MensaSchedule(graph.name, p2, clusters, p1, moved)
+
+    def evaluate(self, graph: ModelGraph) -> ScheduleCost:
+        sched = self.schedule(graph)
+        return schedule_cost(graph, sched.mapping, self.accelerators, self.energy)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel subpackage has kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper, interpret mode off-TPU), and ref.py
+(pure-jnp oracle used by the allclose tests):
+
+  pascal_matmul   -- output-stationary MXU matmul (Mensa Pascal dataflow)
+  jacquard_gemv   -- weight-stationary streaming GEMV (Jacquard dataflow)
+  pavlov_lstm     -- fused LSTM recurrence, W_h VMEM-resident (Pavlov)
+  pavlov_rglru    -- RG-LRU gated linear recurrence (Pavlov)
+  pavlov_ssm      -- fused Mamba selective scan (Pavlov)
+  flash_attention -- blockwise online-softmax attention
+"""

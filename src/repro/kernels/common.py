@@ -1,0 +1,19 @@
+"""Shared kernel utilities: interpret-mode selection and tiling helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def use_interpret() -> bool:
+    """Pallas TPU kernels execute natively on TPU; everywhere else (this CPU
+    container) they run in interpret mode, which executes the kernel body in
+    Python for correctness validation."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

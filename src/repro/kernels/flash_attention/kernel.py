@@ -1,0 +1,99 @@
+"""Blockwise (flash) attention kernel — online softmax with VMEM accumulators.
+
+Grid: (BH, Sq/bq, Skv/bk) with the KV dimension innermost (sequential).  Each
+(q-tile) owns fp32 VMEM scratch (m, l, acc); KV tiles stream through the MXU.
+Causal and sliding-window masks are applied per tile.  GQA is handled by the
+caller (ops.py) via logical head expansion in the BlockSpec index map — KV
+heads are never materialized H/KVH times in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, bq: int, bk: int,
+                  nk: int, sq: int, skv: int):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)[:, None] \
+        + (skv - sq)                                    # align q to kv end
+    kv_pos = kv_idx * bk + jax.lax.iota(jnp.int32, bk)[None, :]
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_idx == nk - 1)
+    def _write():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_raw(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 256, block_kv: int = 256,
+                        group: int = 1,
+                        interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, d); k, v: (BKV, Skv, d) with BH == BKV * group.
+    Returns (BH, Sq, d)."""
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    assert bh == bkv * group
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0
+    nk = skv // block_kv
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(d), causal=causal,
+        window=window, bq=block_q, bk=block_kv, nk=nk, sq=sq, skv=skv)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // block_q, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            # GQA: `group` consecutive q-heads share one kv head
+            pl.BlockSpec((1, block_kv, d),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_kv, d),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,27 @@
+"""Jit'd wrapper: (B,S,H,hd) layout -> flattened (B*H, S, hd) kernel call."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import use_interpret
+from .kernel import flash_attention_raw
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 256, block_kv: int = 256) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KVH,hd) -> (B,Sq,H,hd)."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * kvh, skv, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * kvh, skv, hd)
+    out = flash_attention_raw(qf, kf, vf, causal=causal, window=window,
+                              block_q=block_q, block_kv=block_kv,
+                              group=group, interpret=use_interpret())
+    return jnp.moveaxis(out.reshape(b, h, sq, hd), 1, 2)

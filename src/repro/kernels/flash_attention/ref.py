@@ -1,0 +1,12 @@
+"""Pure-jnp oracle (re-exports the model-level reference attention)."""
+import jax
+import jax.numpy as jnp
+
+from ...models.attention import reference_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window: int = 0):
+    """q: (B,S,H,hd); k,v: (B,S,KVH,hd) -> (B,S,H,hd)."""
+    sq, skv = q.shape[1], k.shape[1]
+    return reference_attention(q, k, v, causal=causal, window=window,
+                               q_offset=skv - sq)

@@ -1,0 +1,5 @@
+from .kernel import jacquard_gemv_raw
+from .ops import jacquard_gemv
+from .ref import jacquard_gemv_ref
+
+__all__ = ["jacquard_gemv", "jacquard_gemv_raw", "jacquard_gemv_ref"]

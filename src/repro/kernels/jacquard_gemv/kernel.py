@@ -1,0 +1,62 @@
+"""Jacquard kernel — weight-stationary streaming GEMV for memory-bound
+(decode-time) matmuls.
+
+The paper's Jacquard dataflow (§5.5): parameters are spatially distributed and
+*pinned* (weight-stationary); activations stream past them.  The TPU-native
+reading for a skinny y = x @ W (M small, W huge): the grid walks W's (K, N)
+tiles exactly once — every parameter byte is read from HBM exactly once, in
+sequential order (the streaming access pattern Pavlov/Jacquard exploit for
+full bandwidth) — while the tiny x block stays VMEM-resident across the whole
+sweep.  Arithmetic intensity is ~M FLOP/byte, so the kernel is structured to
+be bandwidth-optimal, not MXU-optimal.
+
+Grid: (N/bn, K/bk) with K innermost -> per output tile, partial sums reduce
+temporally in a fp32 VMEM accumulator (never spilled to HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemv_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == nk - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def jacquard_gemv_raw(x: jax.Array, w: jax.Array, *,
+                      block_n: int = 512, block_k: int = 1024,
+                      out_dtype=None, interpret: bool = False) -> jax.Array:
+    """x: (M, K) with small M; w: (K, N) streamed once. -> (M, N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert n % block_n == 0 and k % block_k == 0
+    nk = k // block_k
+    out_dtype = out_dtype or x.dtype
+    return pl.pallas_call(
+        functools.partial(_gemv_kernel, nk=nk),
+        grid=(n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda j, kk: (0, kk)),
+            pl.BlockSpec((block_k, block_n), lambda j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,32 @@
+"""Jit'd wrapper for the Jacquard weight-stationary GEMV."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import round_up, use_interpret
+from .kernel import jacquard_gemv_raw
+
+
+@partial(jax.jit, static_argnames=("block_n", "block_k"))
+def jacquard_gemv(x: jax.Array, w: jax.Array, *, block_n: int = 512,
+                  block_k: int = 1024) -> jax.Array:
+    """(..., K) @ (K, N) -> (..., N); intended for small leading dims
+    (decode-time batch)."""
+    *lead, k = x.shape
+    n = w.shape[1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    np_, kp = round_up(n, bn), round_up(k, bk)
+    if kp != k:
+        x2 = jnp.pad(x2, ((0, 0), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    out = jacquard_gemv_raw(x2, wp, block_n=bn, block_k=bk,
+                            out_dtype=x.dtype, interpret=use_interpret())
+    return out[:, :n].reshape(*lead, n)

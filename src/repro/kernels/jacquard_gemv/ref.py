@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for jacquard_gemv."""
+import jax
+import jax.numpy as jnp
+
+
+def jacquard_gemv_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)
+                   ).astype(out_dtype)

@@ -1,0 +1,5 @@
+from .kernel import pascal_matmul_raw
+from .ops import pascal_matmul
+from .ref import pascal_matmul_ref
+
+__all__ = ["pascal_matmul", "pascal_matmul_raw", "pascal_matmul_ref"]

@@ -1,0 +1,61 @@
+"""Pascal kernel — output-stationary MXU matmul with explicit VMEM tiling.
+
+The paper's Pascal dataflow (§5.3): spatially distribute *output* elements,
+temporally reduce partial sums in per-PE registers, multicast parameters.  On
+TPU this is exactly an output-stationary blocked matmul: each (bm x bn) output
+tile owns a fp32 VMEM accumulator, the K dimension streams through the MXU
+innermost (temporal reduction), and each (bk x bn) parameter tile is read from
+HBM once per output tile row (spatial multicast across the MXU lanes).
+
+Block shapes default to MXU-aligned multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def pascal_matmul_raw(x: jax.Array, w: jax.Array, *,
+                      block_m: int = 256, block_n: int = 256,
+                      block_k: int = 512, out_dtype=None,
+                      interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N).  Dims must divide by the blocks."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, \
+        (x.shape, w.shape, block_m, block_n, block_k)
+    nk = k // block_k
+    out_dtype = out_dtype or x.dtype
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the Pascal matmul kernel (pads to block multiples,
+flattens leading batch dims, picks interpret mode off-TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import round_up, use_interpret
+from .kernel import pascal_matmul_raw
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def pascal_matmul(x: jax.Array, w: jax.Array, *, block_m: int = 256,
+                  block_n: int = 256, block_k: int = 512) -> jax.Array:
+    """(..., K) @ (K, N) -> (..., N) via the Pascal output-stationary kernel."""
+    *lead, k = x.shape
+    n = w.shape[1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    if (mp, kp) != (m, k):
+        x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    out = pascal_matmul_raw(x2, wp, block_m=bm, block_n=bn, block_k=bk,
+                            out_dtype=x.dtype, interpret=use_interpret())
+    return out[:m, :n].reshape(*lead, n)

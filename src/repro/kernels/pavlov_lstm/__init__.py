@@ -1,0 +1,5 @@
+from .kernel import pavlov_lstm_raw
+from .ops import pavlov_lstm
+from .ref import pavlov_lstm_ref
+
+__all__ = ["pavlov_lstm", "pavlov_lstm_raw", "pavlov_lstm_ref"]

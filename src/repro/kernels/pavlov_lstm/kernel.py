@@ -1,0 +1,70 @@
+"""Pavlov kernel — fused LSTM recurrence with VMEM-resident hidden weights.
+
+The paper's Pavlov dataflow (§5.4) for LSTM layers:
+  1. *Decouple* input MVMs from hidden MVMs: all x_t @ W_x products for the
+     whole sequence are computed ahead of the recurrence as one large GEMM
+     (done by the caller / ops.py with the Pascal kernel) so W_x is fetched
+     from HBM exactly once.
+  2. The recurrence then only needs W_h, which this kernel fetches into VMEM
+     ONCE and keeps resident across all T steps (the TPU analogue of
+     parameters staying in PE register files), with h/c state in VMEM scratch
+     (temporal reduction of partial sums, K concurrent rows = the batch).
+
+Grid: (T,) sequential; per step the kernel reads one (B, 4H) slice of the
+precomputed input gates, performs h_{t-1} @ W_h on the MXU, applies the four
+gates, and writes h_t.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lstm_kernel(xg_ref, wh_ref, out_ref, h_ref, c_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    h = h_ref[...]
+    gates = xg_ref[:, 0, :].astype(jnp.float32) + jnp.dot(
+        h, wh_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    hd = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, 0 * hd:1 * hd])
+    f = jax.nn.sigmoid(gates[:, 1 * hd:2 * hd] + 1.0)
+    g = jnp.tanh(gates[:, 2 * hd:3 * hd])
+    o = jax.nn.sigmoid(gates[:, 3 * hd:4 * hd])
+    c = f * c_ref[...] + i * g
+    h_new = o * jnp.tanh(c)
+    c_ref[...] = c
+    h_ref[...] = h_new
+    out_ref[:, 0, :] = h_new.astype(out_ref.dtype)
+
+
+def pavlov_lstm_raw(xg: jax.Array, w_h: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """xg: (B, T, 4H) precomputed input gates (+bias); w_h: (H, 4H).
+    Returns h: (B, T, H)."""
+    b, t, h4 = xg.shape
+    hd = h4 // 4
+    assert w_h.shape == (hd, h4), (w_h.shape, (hd, h4))
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((b, 1, h4), lambda tt: (0, tt, 0)),
+            pl.BlockSpec((hd, h4), lambda tt: (0, 0)),   # resident across T
+        ],
+        out_specs=pl.BlockSpec((b, 1, hd), lambda tt: (0, tt, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, hd), xg.dtype),
+        scratch_shapes=[pltpu.VMEM((b, hd), jnp.float32),
+                        pltpu.VMEM((b, hd), jnp.float32)],
+        interpret=interpret,
+    )(xg, w_h)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper: full Pavlov LSTM layer = decoupled input GEMM (W_x read
+once) + fused VMEM-resident recurrence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import use_interpret
+from .kernel import pavlov_lstm_raw
+
+
+@jax.jit
+def pavlov_lstm(x: jax.Array, w_x: jax.Array, w_h: jax.Array,
+                b: jax.Array) -> jax.Array:
+    """x: (B,T,Din); w_x: (Din,4H); w_h: (H,4H); b: (4H,) -> h: (B,T,H).
+
+    Phase 1 (decoupled input MVMs, paper §5.4): one big GEMM over all
+    timesteps.  Phase 2: the sequential recurrence kernel."""
+    xg = jnp.einsum("btd,dh->bth", x, w_x.astype(x.dtype)) + b.astype(x.dtype)
+    return pavlov_lstm_raw(xg, w_h, interpret=use_interpret())

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the Pavlov fused LSTM recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def pavlov_lstm_ref(xg: jax.Array, w_h: jax.Array) -> jax.Array:
+    """xg: (B,T,4H) precomputed input gates; w_h: (H,4H) -> h: (B,T,H)."""
+    b, t, h4 = xg.shape
+    hd = h4 // 4
+    wh = w_h.astype(jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = x_t.astype(jnp.float32) + h @ wh
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((b, hd), jnp.float32), jnp.zeros((b, hd), jnp.float32))
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(xg, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(xg.dtype)

@@ -1,0 +1,5 @@
+from .kernel import pavlov_rglru_raw
+from .ops import pavlov_rglru
+from .ref import pavlov_rglru_ref
+
+__all__ = ["pavlov_rglru", "pavlov_rglru_raw", "pavlov_rglru_ref"]

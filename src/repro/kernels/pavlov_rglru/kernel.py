@@ -1,0 +1,61 @@
+"""Pavlov RG-LRU kernel — gated linear recurrence with VMEM-resident state.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the recurrence width E.  The grid
+tiles E across cores (each E-tile's recurrence is independent) and walks T
+sequentially innermost; the running state h lives in VMEM scratch, giving the
+Pavlov temporal-reduction pattern (state never leaves the core between steps).
+Each (a, b) element streams from HBM exactly once — sequential, full-bandwidth
+access, which is the whole point of the Pavlov design for zero-reuse data.
+
+Inputs are the precomputed per-step decay a and driving term b (the gate
+projections are large GEMMs hoisted out of the recurrence — the decoupled
+schedule again).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_ref, *, bt: int):
+    t_idx = pl.program_id(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)      # (B, bt, be)
+    b = b_ref[...].astype(jnp.float32)
+
+    def step(i, h):
+        h = a[:, i, :] * h + b[:, i, :]
+        o_ref[:, i, :] = h.astype(o_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, bt, step, h_ref[...])
+
+
+def pavlov_rglru_raw(a: jax.Array, b: jax.Array, *, block_t: int = 128,
+                     block_e: int = 512, interpret: bool = False) -> jax.Array:
+    """a, b: (B, T, E) -> h: (B, T, E) with h_t = a_t*h_{t-1} + b_t."""
+    bb, t, e = a.shape
+    block_t = min(block_t, t)
+    block_e = min(block_e, e)
+    assert t % block_t == 0 and e % block_e == 0, (a.shape, block_t, block_e)
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, bt=block_t),
+        grid=(e // block_e, t // block_t),   # E outer, T sequential inner
+        in_specs=[
+            pl.BlockSpec((bb, block_t, block_e), lambda j, tt: (0, tt, j)),
+            pl.BlockSpec((bb, block_t, block_e), lambda j, tt: (0, tt, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, block_t, block_e),
+                               lambda j, tt: (0, tt, j)),
+        out_shape=jax.ShapeDtypeStruct((bb, t, e), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, block_e), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the Pavlov RG-LRU linear-recurrence kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import use_interpret
+from .kernel import pavlov_rglru_raw
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_e"))
+def pavlov_rglru(a: jax.Array, b: jax.Array, *, block_t: int = 128,
+                 block_e: int = 512) -> jax.Array:
+    return pavlov_rglru_raw(a, b, block_t=block_t, block_e=block_e,
+                            interpret=use_interpret())

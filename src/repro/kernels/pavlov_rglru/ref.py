@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: first-order linear recurrence via associative scan."""
+import jax
+import jax.numpy as jnp
+
+
+def pavlov_rglru_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t, h_{-1} = 0.  a,b: (B,T,E)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype)

@@ -1,0 +1,5 @@
+from .kernel import pavlov_ssm_raw
+from .ops import pavlov_ssm
+from .ref import pavlov_ssm_ref
+
+__all__ = ["pavlov_ssm", "pavlov_ssm_raw", "pavlov_ssm_ref"]

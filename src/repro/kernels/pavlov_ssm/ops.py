@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the Pavlov fused selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import use_interpret
+from .kernel import pavlov_ssm_raw
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_d"))
+def pavlov_ssm(delta, x, bc, cc, a, d_skip, *, block_t: int = 64,
+               block_d: int = 512):
+    return pavlov_ssm_raw(delta, x, bc, cc, a, d_skip, block_t=block_t,
+                          block_d=block_d, interpret=use_interpret())

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the selective scan (materializes alpha/beta)."""
+import jax
+import jax.numpy as jnp
+
+
+def pavlov_ssm_ref(delta, x, bc, cc, a, d_skip):
+    """delta,x: (B,T,D); bc,cc: (B,T,N); a: (D,N); d_skip: (D,) -> (B,T,D)."""
+    deltaf = delta.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    alpha = jnp.exp(deltaf[..., None] * a.astype(jnp.float32)[None, None])
+    beta = (deltaf * xf)[..., None] * bc.astype(jnp.float32)[:, :, None, :]
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (alpha, beta), axis=1)
+    y = jnp.einsum("btdn,btn->btd", h, cc.astype(jnp.float32)) \
+        + xf * d_skip.astype(jnp.float32)
+    return y.astype(delta.dtype)

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+# ShapeDtypeStruct inputs (no allocation) and record memory / cost / collective
+# analyses for the roofline.
+#
+# The first two lines force 512 placeholder host devices and MUST run before
+# ANY other import (jax locks the device count on first init).
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, SHAPES, ShapeSpec, applicable, get_config
+from ..models import build_model
+from ..train import optim
+from ..train.trainer import make_train_step
+from ..utils.hlo import parse_collectives
+from . import shardings as sh
+from .mesh import data_axes, make_production_mesh
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# grad-accumulation per cell: keeps per-microbatch activations within HBM
+ACCUM = {
+    "default": 8,
+    "smollm-135m": 2, "qwen3-0.6b": 4, "qwen2-0.5b": 4,
+    "falcon-mamba-7b": 16, "llama4-scout-17b-a16e": 32,
+    "starcoder2-7b": 8, "phi3.5-moe-42b-a6.6b": 16,
+}
+
+
+def input_specs(cfg, shape: ShapeSpec, mesh, strategy: str = "tp") -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+    shardable, no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - cfg.modality_tokens          # image/audio tokens count
+    bspecs = sh.batch_specs(cfg, mesh, b, strategy)
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((b, s_text), jnp.int32)}
+        if cfg.modality_tokens:
+            out["modality"] = jax.ShapeDtypeStruct(
+                (b, cfg.modality_tokens, cfg.modality_dim), jnp.float32)
+        if cfg.is_encdec:
+            out["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, s // 2, cfg.d_model), jnp.float32)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s // 2), jnp.int32)
+            out["labels"] = jax.ShapeDtypeStruct((b, s // 2), jnp.int32)
+        return sh.abstract_with_sharding(
+            out, {k: bspecs.get(k, bspecs["tokens"]) for k in out}, mesh)
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32)}
+        if cfg.modality_tokens:
+            out["modality"] = jax.ShapeDtypeStruct(
+                (b, cfg.modality_tokens, cfg.modality_dim), jnp.float32)
+        if cfg.is_encdec:
+            out["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, s // 2, cfg.d_model), jnp.float32)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s // 2), jnp.int32)
+        specs = {"tokens": bspecs["tokens"]}
+        if "modality" in out:
+            specs["modality"] = bspecs["modality"]
+        if "src_embeds" in out:
+            specs["src_embeds"] = bspecs["src_embeds"]
+        return sh.abstract_with_sharding(out, specs, mesh)
+    # decode: one new token against a seq_len-deep cache
+    out = {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+           "position": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    d = data_axes(mesh)
+    nd = int(np.prod([mesh.shape[a] for a in d]))
+    bs = d if b % nd == 0 and b >= nd else None
+    from jax.sharding import PartitionSpec as P
+    specs = {"token": P(bs, None), "position": P(bs)}
+    if cfg.is_encdec:
+        out["memory"] = jax.ShapeDtypeStruct((b, shape.seq_len // 2,
+                                              cfg.d_model), jnp.bfloat16)
+        specs["memory"] = P(bs, None, None)
+    return sh.abstract_with_sharding(out, specs, mesh)
+
+
+def _tree_bytes(tree) -> float:
+    return float(sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                     for l in jax.tree.leaves(tree)))
+
+
+def build_lowerable(cfg, shape: ShapeSpec, mesh, strategy: str = "tp"):
+    """Returns (fn, abstract_args, out_shardings) ready to lower."""
+    model = build_model(cfg)
+    pshape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = sh.param_specs(cfg, pshape, strategy)
+    params_abs = sh.abstract_with_sharding(pshape, pspecs, mesh)
+    inputs = input_specs(cfg, shape, mesh, strategy)
+
+    if shape.kind == "train":
+        accum = ACCUM.get(cfg.name, ACCUM["default"])
+        if shape.global_batch % accum or shape.global_batch // accum < 1:
+            accum = 1
+        step_fn = make_train_step(model, accum_steps=accum)
+        opt_shape = jax.eval_shape(optim.adamw_init, pshape)
+        opt_specs = optim.AdamWState(
+            step=jax.sharding.PartitionSpec(), mu=pspecs,
+            nu=jax.tree.map(lambda s: s, pspecs))
+        opt_abs = sh.abstract_with_sharding(opt_shape, opt_specs, mesh)
+        args = (params_abs, opt_abs, inputs)
+        fn = step_fn
+        out_sh = None
+        meta = {"accum_steps": accum}
+    elif shape.kind == "prefill":
+        model_states = jax.eval_shape(
+            lambda: model.init_states(shape.global_batch, shape.seq_len))
+        sspecs = sh.state_specs(model, mesh, shape.global_batch, shape.seq_len)
+        states_abs = sh.abstract_with_sharding(model_states, sspecs, mesh)
+
+        def fn(params, tokens_dict, states):
+            return model.prefill(params, tokens_dict["tokens"], states,
+                                 tokens_dict.get("modality"),
+                                 tokens_dict.get("src_embeds"))
+        args = (params_abs, inputs, states_abs)
+        out_sh = None
+        meta = {}
+    else:  # decode
+        model_states = jax.eval_shape(
+            lambda: model.init_states(shape.global_batch, shape.seq_len))
+        sspecs = sh.state_specs(model, mesh, shape.global_batch, shape.seq_len)
+        states_abs = sh.abstract_with_sharding(model_states, sspecs, mesh)
+
+        def fn(params, io, states):
+            return model.decode_step(params, io["token"], states,
+                                     io["position"], io.get("memory"))
+        args = (params_abs, inputs, states_abs)
+        out_sh = None
+        meta = {}
+    meta["param_bytes"] = _tree_bytes(pshape)
+    return fn, args, out_sh, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: Path = RESULTS_DIR, save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+    if not ok:
+        rec.update(status="skip", reason=why)
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: SKIP ({why})")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        fn, args, out_sh, meta = build_lowerable(cfg, shape, mesh)
+        # donate params/opt (train) or states (serve): updates alias their
+        # inputs in place, as on a real pod
+        donate = (0, 1) if shape.kind == "train" else (2,)
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        coll = parse_collectives(hlo, default_group=n_dev)
+        rec.update(
+            status="ok", meta=meta,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            n_devices=n_dev,
+            flops=float(cost.get("flops", 0.0)) if cost else 0.0,
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+            memory=_mem_dict(mem),
+            collectives=coll.to_dict(),
+            hlo_bytes=len(hlo),
+        )
+        if save_hlo:
+            (out_dir / f"{arch}__{shape_name}__{mesh_kind}.hlo.txt"
+             ).write_text(hlo)
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: OK "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s, "
+              f"flops/dev {rec['flops']:.3g}, "
+              f"coll wire {coll.total_wire_bytes:.3g}B)")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "
+              f"ERROR {type(e).__name__}: {e}")
+    out_path.write_text(json.dumps(rec, indent=1, default=float))
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def all_cells() -> list[tuple[str, str, str]]:
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                cells.append((arch, shape, mesh))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    if args.all:
+        for arch, shape, mesh in all_cells():
+            p = out_dir / f"{arch}__{shape}__{mesh}.json"
+            if args.skip_done and p.exists() \
+                    and json.loads(p.read_text()).get("status") in ("ok", "skip"):
+                continue
+            run_cell(arch, shape, mesh, out_dir, args.save_hlo)
+    else:
+        assert args.arch and args.shape
+        run_cell(args.arch, args.shape, args.mesh, out_dir, args.save_hlo)
+
+
+if __name__ == "__main__":
+    main()

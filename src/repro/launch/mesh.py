@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — required because the dry-run forces 512 host
+devices while tests/benches must see 1.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips, axes (data, model).
+    Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model) — the `pod` axis
+    carries only DCN-friendly gradient/batch parallelism."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry batch parallelism."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_host_mesh(shape=(1,), axes=("data",)):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    import numpy as np
+    n = int(np.prod(shape))
+    if len(jax.devices()) < n:
+        raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
+    return jax.make_mesh(shape, axes)

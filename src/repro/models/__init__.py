@@ -1,0 +1,5 @@
+"""JAX model substrate: attention/FFN/MoE/recurrent blocks and arch assembly."""
+from .model_config import ArchConfig
+from .transformer import Model, build_model
+
+__all__ = ["ArchConfig", "Model", "build_model"]

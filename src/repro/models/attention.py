@@ -1,0 +1,252 @@
+"""Attention: GQA projections (+optional bias/qk-norm), RoPE, and three cores:
+
+* ``flash_attention``  — blockwise online-softmax attention (lax.scan over KV
+  blocks).  This is the memory-bounded production path: peak live memory is
+  O(S x block) instead of O(S^2).  Supports causal + sliding-window masks and
+  GQA without materializing repeated KV heads.
+* ``local_attention``  — exact sliding-window attention via chunking (each
+  chunk attends to itself + the previous chunk with a band mask); cost is
+  O(S x 2w) — the sub-quadratic path used by RecurrentGemma.
+* ``decode_attention`` — single-token attention against a KV cache.
+
+The Pallas TPU kernel (kernels/flash_attention) implements the same math with
+explicit VMEM tiling; these jnp versions are its oracle and the CPU/dry-run
+lowering path.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, fan_in_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ parameters
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   qk_norm: bool = False, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": fan_in_init(ks[0], (d_model, num_heads * head_dim), dtype),
+        "wk": fan_in_init(ks[1], (d_model, num_kv_heads * head_dim), dtype),
+        "wv": fan_in_init(ks[2], (d_model, num_kv_heads * head_dim), dtype),
+        "wo": fan_in_init(ks[3], (num_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((head_dim,), dtype)
+    return p
+
+
+def qkv_project(params: dict, x: jax.Array, num_heads: int, num_kv_heads: int,
+                head_dim: int, positions: jax.Array, *, rope_theta: float,
+                use_rope: bool = True):
+    """x: (B,S,D) -> q (B,S,H,hd), k/v (B,S,KVH,hd), all rotated."""
+    b, s, _ = x.shape
+    dt = x.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+# ------------------------------------------------------- blockwise (flash) core
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_kv: int = 512,
+                    q_offset: int | jax.Array = 0,
+                    unroll: bool = False,
+                    f32_probs: bool = True) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KVH, hd) with H % KVH == 0.
+    Returns (B, Sq, H, hd).  ``q_offset`` is the absolute position of q[0]
+    relative to k[0] (for cached prefill continuation).
+    """
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    assert h % kvh == 0
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    blocks = max(1, math.ceil(skv / block_kv))
+    pad = blocks * block_kv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, blocks, block_kv, kvh, hd)
+    vb = v.reshape(b, blocks, block_kv, kvh, hd)
+
+    qg = (q.reshape(b, sq, kvh, g, hd) * scale).astype(jnp.float32)
+    q_pos = jnp.arange(sq) + q_offset                       # (Sq,)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, kv_start = blk                          # (B,bk,KVH,hd) x2
+        s = jnp.einsum("bqnGd,bknd->bnGqk", qg,
+                       kblk.astype(jnp.float32))            # (B,KVH,G,Sq,bk)
+        kv_pos = kv_start + jnp.arange(block_kv)            # (bk,)
+        mask = kv_pos[None, :] <= skv - 1                   # padding
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        if f32_probs:
+            pv = jnp.einsum("bnGqk,bknd->bnGqd", p,
+                            vblk.astype(jnp.float32))
+        else:
+            # bf16 probabilities into the PV matmul (fp32 accumulation):
+            # halves the dominant (Sq x block) buffer traffic
+            pv = jnp.einsum("bnGqk,bknd->bnGqd", p.astype(jnp.bfloat16),
+                            vblk.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    kv_starts = jnp.arange(blocks) * block_kv
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kv_starts),
+        unroll=blocks if unroll else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd)      # (B,Sq,H,hd)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------- local (sliding) core
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int) -> jax.Array:
+    """Exact causal sliding-window attention, O(S*2w) memory.
+
+    Chunks the sequence by ``window``; each chunk attends to itself + previous
+    chunk under (causal AND distance<window) masking — exactly the sliding
+    window.  q,k,v: (B,S,H|KVH,hd); S % window must be 0 (pad upstream).
+    """
+    b, s, h, hd = q.shape
+    _, _, kvh, _ = k.shape
+    g = h // kvh
+    assert s % window == 0, "pad sequence to a multiple of the window"
+    c = s // window
+    scale = 1.0 / math.sqrt(hd)
+    qc = (q.reshape(b, c, window, kvh, g, hd) * scale).astype(jnp.float32)
+    kc = k.reshape(b, c, window, kvh, hd).astype(jnp.float32)
+    vc = v.reshape(b, c, window, kvh, hd).astype(jnp.float32)
+    # previous chunk (zero-pad for the first)
+    kp = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vp = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    kk = jnp.concatenate([kp, kc], axis=2)                   # (B,c,2w,KVH,hd)
+    vv = jnp.concatenate([vp, vc], axis=2)
+    scores = jnp.einsum("bcqnGd,bcknd->bcnGqk", qc, kk)      # (B,c,KVH,G,w,2w)
+    qpos = jnp.arange(window)[:, None]
+    kpos = jnp.arange(2 * window)[None, :] - window
+    mask = (kpos <= qpos) & (kpos > qpos - window)
+    first_chunk_mask = kpos >= 0                             # no phantom prev
+    scores = jnp.where(mask, scores, NEG_INF)
+    s_first = jnp.where(first_chunk_mask & mask, scores[:, 0], NEG_INF)
+    scores = scores.at[:, 0].set(s_first)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bcnGqk,bcknd->bcqnGd", p, vv)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+# -------------------------------------------------------------------- decoding
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S_max, KVH, hd)
+    v: jax.Array
+    length: jax.Array   # (B,) int32 — tokens currently cached
+
+
+def init_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
+def decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
+                     cache: KVCache, *, window: int = 0
+                     ) -> tuple[jax.Array, KVCache]:
+    """One-token attention against the cache.
+
+    q/new_k/new_v: (B,1,H|KVH,hd).  Appends the new KV at position length[b]
+    and attends to all cached positions (optionally only the last `window`).
+    """
+    b, one, h, hd = q.shape
+    _, _, kvh, _ = new_k.shape
+    g = h // kvh
+    smax = cache.k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    idx = cache.length                                           # (B,)
+    if window:
+        # ring-buffer the window: write at position length % window
+        idx = cache.length % jnp.int32(cache.k.shape[1])
+    onehot = jax.nn.one_hot(idx, smax, dtype=cache.k.dtype)      # (B,Smax)
+    oh = onehot[:, :, None, None]
+    k = cache.k * (1 - oh) + oh * new_k.astype(cache.k.dtype)    # replace slot
+    v = cache.v * (1 - oh) + oh * new_v.astype(cache.v.dtype)
+
+    qg = (q.reshape(b, kvh, g, hd) * scale).astype(jnp.float32)
+    s = jnp.einsum("bnGd,bknd->bnGk", qg, k.astype(jnp.float32))  # (B,KVH,G,Smax)
+    pos = jnp.arange(smax)[None, :]
+    valid = pos <= cache.length[:, None]                          # incl. new tok
+    if window:
+        valid = pos < jnp.minimum(cache.length + 1, window)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnGk,bknd->bnGd", p, v.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(q.dtype)
+    return out, KVCache(k=k, v=v, length=cache.length + 1)
+
+
+# ------------------------------------------------------------------- reference
+def reference_attention(q, k, v, *, causal=True, window: int = 0,
+                        q_offset: int | jax.Array = 0) -> jax.Array:
+    """Naive O(S^2) oracle used by tests."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q.reshape(b, sq, kvh, g, hd) * scale).astype(jnp.float32)
+    s = jnp.einsum("bqnGd,bknd->bnGqk", qg, k.astype(jnp.float32))
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnGqk,bknd->bnGqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd).astype(q.dtype)

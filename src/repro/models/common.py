@@ -1,0 +1,117 @@
+"""Shared model building blocks: norms, rotary embeddings, initializers, and the
+parameter-tree conventions used across all architectures.
+
+Conventions
+-----------
+* Parameters are plain nested dicts of jnp arrays (no flax/haiku): ``params``.
+* Every module exposes ``init(key, cfg) -> params`` and a pure ``apply``.
+* Compute dtype is bf16, parameters are stored in the config's param_dtype
+  (fp32 for training masters, bf16 for serving), accumulation in fp32.
+* Layer-stacked parameters (for ``lax.scan`` over layers) have a leading
+  ``num_layers`` axis produced by ``jax.vmap``-ed init.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------- initializers
+def normal_init(key, shape, scale: float, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    return normal_init(key, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+# ------------------------------------------------------------------------ norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, max_pos: int, theta: float = 10000.0,
+                     dtype=jnp.float32):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)
+    return jnp.cos(freqs).astype(dtype), jnp.sin(freqs).astype(dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    freqs = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(freqs)[..., :, None, :]
+    sin = jnp.sin(freqs)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- embeds
+def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):
+    return normal_init(key, (vocab, dim), 1.0 / math.sqrt(dim), dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array, compute_dtype=jnp.bfloat16):
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits in fp32 (softmax stability)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------- softmax
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy. logits fp32 (..., vocab); labels int (...)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------- residual
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "gelu": gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}

@@ -1,0 +1,43 @@
+"""Feed-forward blocks: gated-linear-unit MLPs (SwiGLU/GeGLU) and plain MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, fan_in_init
+
+
+def init_glu_ffn(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": fan_in_init(k1, (d_model, d_ff), dtype),
+        "w_up": fan_in_init(k2, (d_model, d_ff), dtype),
+        "w_down": fan_in_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def glu_ffn(params: dict, x: jax.Array, activation: str = "silu") -> jax.Array:
+    dt = x.dtype
+    act = ACTIVATIONS[activation]
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", act(g) * u, params["w_down"].astype(dt))
+
+
+def init_mlp_ffn(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_in": fan_in_init(k1, (d_model, d_ff), dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": fan_in_init(k2, (d_ff, d_model), dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp_ffn(params: dict, x: jax.Array, activation: str = "gelu") -> jax.Array:
+    dt = x.dtype
+    act = ACTIVATIONS[activation]
+    h = act(jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dt))
+            + params["b_in"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(dt)) \
+        + params["b_out"].astype(dt)

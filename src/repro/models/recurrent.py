@@ -1,0 +1,259 @@
+"""Recurrent blocks — the Mensa "Pavlov cluster" at pod scale.
+
+* ``rglru_block`` — RecurrentGemma/Griffin recurrent block: temporal conv1d +
+  RG-LRU gated linear recurrence, GeLU-gated output branch.
+* ``mamba_block`` — Mamba-1 selective SSM (Falcon-Mamba).
+* ``lstm_layer``  — classic LSTM (reference for the Pavlov kernels and the
+  edge-model examples).
+
+All recurrences are expressed as first-order linear recurrences
+h_t = a_t * h_{t-1} + b_t and computed with ``jax.lax.associative_scan``
+inside sequence chunks (lax.scan carries the state across chunks), which
+bounds peak memory to O(chunk) per layer and keeps the HLO compact.
+
+The Pavlov design maps here as: recurrence weights are fetched once and stay
+resident across the whole time scan (VMEM-resident in the Pallas kernels);
+input projections for *all* timesteps are hoisted out of the recurrence as one
+large GEMM (the paper's decoupled input/hidden MVM schedule, §5.4).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import fan_in_init, normal_init
+
+
+def _chunked_linear_scan(a, b, h0, chunk: int, unroll: bool = False):
+    """h_t = a_t * h_{t-1} + b_t along axis 1.  a,b: (B,S,...), h0: (B,...)."""
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    nc = S // chunk
+    a_c = a.reshape((B, nc, chunk) + a.shape[2:])
+    b_c = b.reshape((B, nc, chunk) + b.shape[2:])
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, ab):
+        ac, bc = ab                          # (B, chunk, ...)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_new = aa * h[:, None] + bb         # fold in carry
+        return h_new[:, -1], h_new
+
+    h_last, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a_c, 1, 0),
+                                         jnp.moveaxis(b_c, 1, 0)),
+                              unroll=nc if unroll else 1)
+    hs = jnp.moveaxis(hs, 0, 1).reshape((B, S) + a.shape[2:])
+    return hs, h_last
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal temporal conv.  x: (B,S,C), w: (K,C).
+    ``state``: (B,K-1,C) trailing context from the previous segment (decode).
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------- RG-LRU
+def init_rglru_block(key, d_model: int, d_rnn: int, *, conv_width: int = 4,
+                     gate_blocks: int = 0, dtype=jnp.float32) -> dict:
+    """gate_blocks > 0: block-diagonal recurrence/input gates (Griffin's
+    actual design) — with #blocks a multiple of the mesh `model` axis the
+    gate matmuls are fully local under TP (no collectives)."""
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = sigmoid(L)^(c*r) sits in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (d_rnn,), jnp.float32, 0.9, 0.999)
+    c = 8.0
+    lam = jnp.log(u ** (1.0 / c) / (1.0 - u ** (1.0 / c)))
+    if gate_blocks:
+        assert d_rnn % gate_blocks == 0
+        bd = d_rnn // gate_blocks
+        gk1 = jax.random.split(ks[4], gate_blocks)
+        gk2 = jax.random.split(ks[5], gate_blocks)
+        w_a = jnp.stack([fan_in_init(k, (bd, bd), dtype) for k in gk1])
+        w_i = jnp.stack([fan_in_init(k, (bd, bd), dtype) for k in gk2])
+    else:
+        w_a = fan_in_init(ks[4], (d_rnn, d_rnn), dtype)
+        w_i = fan_in_init(ks[5], (d_rnn, d_rnn), dtype)
+    return {
+        "w_x": fan_in_init(ks[1], (d_model, d_rnn), dtype),
+        "w_y": fan_in_init(ks[2], (d_model, d_rnn), dtype),
+        "conv_w": normal_init(ks[3], (conv_width, d_rnn),
+                              1.0 / math.sqrt(conv_width), dtype),
+        "w_a": w_a,   # recurrence gate
+        "w_i": w_i,   # input gate
+        "lambda": lam.astype(dtype),
+        "w_out": fan_in_init(ks[6], (d_rnn, d_model), dtype),
+    }
+
+
+def rglru_core(params: dict, x: jax.Array, h0: jax.Array | None = None,
+               chunk: int = 512, unroll: bool = False):
+    """The RG-LRU recurrence.  x: (B,S,d_rnn) (post-conv).  Returns (y, h_T)."""
+    dt = x.dtype
+    c = 8.0
+    xf = x.astype(jnp.float32)
+    if params["w_a"].ndim == 3:       # block-diagonal gates (local under TP)
+        g = params["w_a"].shape[0]
+        xg = xf.reshape(xf.shape[0], xf.shape[1], g, -1)
+        r = jax.nn.sigmoid(jnp.einsum(
+            "bsgd,gde->bsge", xg, params["w_a"].astype(jnp.float32)
+        ).reshape(xf.shape))
+        i = jax.nn.sigmoid(jnp.einsum(
+            "bsgd,gde->bsge", xg, params["w_i"].astype(jnp.float32)
+        ).reshape(xf.shape))
+    else:
+        # gate matmuls in compute dtype (bf16): the TP partial-sum all-reduce
+        # moves half the bytes vs f32; sigmoid applied in f32 after
+        r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x,
+                                      params["w_a"].astype(dt)
+                                      ).astype(jnp.float32))
+        i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x,
+                                      params["w_i"].astype(dt)
+                                      ).astype(jnp.float32))
+    log_a = -c * r * jax.nn.softplus(-params["lambda"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = i * xf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * gated
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+    h, h_last = _chunked_linear_scan(a, b, h0, chunk, unroll)
+    return h.astype(dt), h_last
+
+
+def rglru_block(params: dict, x: jax.Array, *, chunk: int = 512,
+                unroll: bool = False,
+                state: dict | None = None, return_state: bool = False):
+    """Full Griffin recurrent block.  x: (B,S,D) -> (B,S,D)."""
+    dt = x.dtype
+    y = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["w_y"].astype(dt)),
+                    approximate=True)
+    u = jnp.einsum("bsd,de->bse", x, params["w_x"].astype(dt))
+    conv_state = state["conv"] if state else None
+    h0 = state["h"] if state else None
+    u, new_conv = causal_conv1d(u, params["conv_w"].astype(dt), conv_state)
+    h, h_last = rglru_core(params, u, h0, chunk, unroll)
+    out = jnp.einsum("bse,ed->bsd", (h * y), params["w_out"].astype(dt))
+    if return_state:
+        return out, {"conv": new_conv, "h": h_last}
+    return out
+
+
+# ---------------------------------------------------------------------- Mamba-1
+def init_mamba_block(key, d_model: int, d_inner: int, d_state: int = 16,
+                     d_conv: int = 4, dt_rank: int | None = None,
+                     dtype=jnp.float32) -> dict:
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 7)
+    a_init = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None],
+                      (d_inner, 1))
+    return {
+        "in_proj": fan_in_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": normal_init(ks[1], (d_conv, d_inner),
+                              1.0 / math.sqrt(d_conv), dtype),
+        "x_proj": fan_in_init(ks[2], (d_inner, dt_rank + 2 * d_state), dtype),
+        "dt_proj": fan_in_init(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jax.random.uniform(ks[4], (d_inner,), jnp.float32, 1e-3, 1e-1)
+        )).astype(dtype),
+        "a_log": jnp.log(a_init).astype(dtype),
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "out_proj": fan_in_init(ks[5], (d_inner, d_model), dtype),
+    }
+
+
+def mamba_ssm(params: dict, x: jax.Array, dt_rank: int, d_state: int,
+              h0: jax.Array | None = None, chunk: int = 256,
+              unroll: bool = False):
+    """Selective scan.  x: (B,S,d_inner) (post conv+silu).  Returns (y, h_T)."""
+    B_, S, di = x.shape
+    xf = x.astype(jnp.float32)
+    proj = jnp.einsum("bsd,dr->bsr", xf, params["x_proj"].astype(jnp.float32))
+    dt_in, b_in, c_in = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, params["dt_proj"].astype(jnp.float32))
+        + params["dt_bias"].astype(jnp.float32))                    # (B,S,di)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))               # (di,Ns)
+    # first-order recurrence per (channel, state): h = exp(delta*a) h + delta*B*x
+    alpha = jnp.exp(delta[..., None] * a[None, None])               # (B,S,di,Ns)
+    beta = (delta * xf)[..., None] * b_in[:, :, None, :]            # (B,S,di,Ns)
+    if h0 is None:
+        h0 = jnp.zeros((B_, di, d_state), jnp.float32)
+    h, h_last = _chunked_linear_scan(alpha, beta, h0, chunk, unroll)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_in) \
+        + xf * params["d_skip"].astype(jnp.float32)
+    return y.astype(x.dtype), h_last
+
+
+def mamba_block(params: dict, x: jax.Array, *, d_state: int = 16,
+                dt_rank: int | None = None, chunk: int = 256,
+                unroll: bool = False,
+                state: dict | None = None, return_state: bool = False):
+    """Full Mamba-1 block.  x: (B,S,D) -> (B,S,D)."""
+    dt = x.dtype
+    d_model = x.shape[-1]
+    dt_rank = dt_rank or max(1, d_model // 16)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state else None
+    h0 = state["h"] if state else None
+    xi, new_conv = causal_conv1d(xi, params["conv_w"].astype(dt), conv_state)
+    xi = jax.nn.silu(xi)
+    y, h_last = mamba_ssm(params, xi, dt_rank, d_state, h0, chunk, unroll)
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z),
+                     params["out_proj"].astype(dt))
+    if return_state:
+        return out, {"conv": new_conv, "h": h_last}
+    return out
+
+
+# ------------------------------------------------------------------------ LSTM
+def init_lstm_layer(key, d_in: int, d_hidden: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_x": fan_in_init(k1, (d_in, 4 * d_hidden), dtype),
+        "w_h": fan_in_init(k2, (d_hidden, 4 * d_hidden), dtype),
+        "b": jnp.zeros((4 * d_hidden,), dtype),
+    }
+
+
+def lstm_layer(params: dict, x: jax.Array,
+               state: tuple[jax.Array, jax.Array] | None = None):
+    """x: (B,S,Din) -> (B,S,H).  The input MVMs for *all* timesteps are
+    computed as one batched GEMM before the recurrence (the paper's Pavlov
+    decoupled schedule) so W_x is read exactly once."""
+    b, s, _ = x.shape
+    h4 = params["w_x"].shape[1]
+    hd = h4 // 4
+    dt = x.dtype
+    if state is None:
+        state = (jnp.zeros((b, hd), jnp.float32), jnp.zeros((b, hd), jnp.float32))
+    # decoupled input MVMs (one GEMM over the whole sequence)
+    xg = jnp.einsum("bsd,dh->bsh", x, params["w_x"].astype(dt)) \
+        + params["b"].astype(dt)
+
+    wh = params["w_h"].astype(jnp.float32)
+
+    def step(carry, xg_t):
+        h, c = carry
+        gates = xg_t.astype(jnp.float32) + h @ wh
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    (h, c), ys = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+    return jnp.moveaxis(ys, 0, 1).astype(dt), (h, c)

@@ -1,0 +1,129 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+The engine owns per-slot KV/recurrent state; requests are admitted into free
+slots, prefilled (left-padded into the shared cache), then advanced in lockstep
+decode steps.  Finished slots (EOS or max_tokens) are evicted and refilled —
+the standard continuous-batching pattern (vLLM-style), with a static slot
+count so every jitted shape is fixed.
+
+Per the Mensa reading: prefill steps are compute-centric (Pascal cluster) and
+decode steps memory-centric (Jacquard/Pavlov clusters); the engine keeps them
+as separate jitted programs so each lowers with its own strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.transformer import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int = -1
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 512, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.states = model.init_states(slots, max_len)
+        self.memory = None
+        self.requests: list[Request | None] = [None] * slots
+        self.positions = np.zeros(slots, np.int32)
+        self._decode = jax.jit(model.decode_step)
+        self._queue: list[Request] = []
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.requests[slot] is None and self._queue:
+                req = self._queue.pop(0)
+                self.requests[slot] = req
+                self._prefill_slot(slot, req)
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        """Single-slot prefill: runs the prompt through a batch-1 cache and
+        splices the result into the shared slot states."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        states1 = self.model.init_states(1, self.max_len)
+        logits, states1, _ = self.model.prefill(self.params, toks, states1)
+        self.states = _splice_states(self.states, states1, slot)
+        self.positions[slot] = len(req.prompt)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(tok)
+
+    # ---------------------------------------------------------------- decode
+    def step(self) -> None:
+        self._admit()
+        active = [i for i, r in enumerate(self.requests) if r is not None]
+        if not active:
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.requests[i].generated[-1] \
+                if self.requests[i].generated else self.requests[i].prompt[-1]
+        logits, self.states = self._decode(
+            self.params, jnp.asarray(toks), self.states,
+            jnp.asarray(self.positions), self.memory)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for i in active:
+            req = self.requests[i]
+            self.positions[i] += 1
+            req.generated.append(int(nxt[i]))
+            if (len(req.generated) >= req.max_new_tokens
+                    or int(nxt[i]) == req.eos_id
+                    or self.positions[i] >= self.max_len - 1):
+                req.done = True
+                self.requests[i] = None
+
+    def run(self, requests: list[Request], max_steps: int = 10_000
+            ) -> list[Request]:
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while (self._queue or any(r is not None for r in self.requests)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return requests
+
+
+def _splice_states(pool_states, one_states, slot: int):
+    """Write batch-1 `one_states` into slot `slot` of the pooled states.
+    Batch is the first axis for tail states and the second for stacked
+    (scan-group) states."""
+
+    def splice(pool, new):
+        if pool.ndim == new.ndim:          # tail state: batch axis 0
+            return jax.lax.dynamic_update_slice(
+                pool, new.astype(pool.dtype),
+                (slot,) + (0,) * (pool.ndim - 1))
+        raise ValueError((pool.shape, new.shape))
+
+    def splice_stacked(pool, new):
+        # pool: (G, B, ...), new: (G, 1, ...)
+        return jax.lax.dynamic_update_slice(
+            pool, new.astype(pool.dtype),
+            (0, slot) + (0,) * (pool.ndim - 2))
+
+    out_groups = jax.tree.map(splice_stacked, pool_states["groups"],
+                              one_states["groups"])
+    out_tail = jax.tree.map(splice, pool_states["tail"], one_states["tail"])
+    return {"groups": out_groups, "tail": out_tail}

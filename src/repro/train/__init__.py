@@ -1,0 +1,5 @@
+"""Training substrate: optimizers, schedules, trainer, gradient compression."""
+from . import optim
+from .trainer import make_train_step
+
+__all__ = ["optim", "make_train_step"]

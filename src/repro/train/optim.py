@@ -1,0 +1,127 @@
+"""Optimizers + schedules, implemented from scratch (no optax dependency).
+
+AdamW with decoupled weight decay, global-norm clipping, and cosine/linear
+warmup schedules.  Optimizer state is a pytree congruent with params, so the
+parameter sharding specs apply to it unchanged (fully sharded optimizer state
+comes for free from the `model`-axis parameter sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # ()
+    mu: PyTree               # first moment  (fp32, like params)
+    nu: PyTree               # second moment
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads: PyTree, state: AdamWState, params: PyTree, *,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1
+                 ) -> tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decoupled decay on matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (-lr * delta).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    updates = treedef.unflatten([o[0] for o in out])
+    mu = treedef.unflatten([o[1] for o in out])
+    nu = treedef.unflatten([o[2] for o in out])
+    return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)
+
+
+# -------------------------------------------------------------------- schedules
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def linear_schedule(base_lr: float, warmup: int, total: int):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, base_lr * (1 - prog))
+    return f
+
+
+# ----------------------------------------------------------------- SGD (ablation)
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: PyTree
+
+
+def sgd_init(params: PyTree) -> SGDState:
+    return SGDState(step=jnp.zeros((), jnp.int32),
+                    momentum=jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def sgd_update(grads: PyTree, state: SGDState, params: PyTree, *,
+               lr: jax.Array, momentum: float = 0.9):
+    step = state.step + 1
+
+    def upd(g, m, p):
+        m = momentum * m + g.astype(jnp.float32)
+        return (-lr * m).astype(p.dtype), m
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.momentum)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+    return (treedef.unflatten([o[0] for o in out]),
+            SGDState(step, treedef.unflatten([o[1] for o in out])))

@@ -1,0 +1,64 @@
+"""Training step factory: grad accumulation (lax.scan over microbatches),
+global-norm clipping, AdamW, bf16 compute / fp32 masters, optional int8
+error-feedback gradient compression (see grad.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+from . import optim
+
+PyTree = Any
+
+
+def make_train_step(model: Model, *, accum_steps: int = 1,
+                    schedule: Callable | None = None,
+                    max_grad_norm: float = 1.0,
+                    weight_decay: float = 0.1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    `batch` leaves have a leading global-batch axis; with accum_steps > 1 the
+    step reshapes to (A, B/A, ...) and accumulates grads over a lax.scan so
+    peak activation memory is one microbatch.
+    """
+    schedule = schedule or optim.cosine_schedule(3e-4, 100, 10_000)
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)),
+                                           micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+
+        grads, gnorm = optim.clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(opt_state.step)
+        updates, opt_state = optim.adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay)
+        params = optim.apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,103 @@
+"""Post-SPMD HLO analysis: collective-traffic extraction for the roofline.
+
+Parses ``compiled.as_text()`` and sums operand/result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Wire-byte conventions (ring algorithms over an n-device group):
+  all-gather:          out_bytes * (n-1)/n        per participant
+  reduce-scatter:      in_bytes  * (n-1)/n
+  all-reduce:          2 * bytes * (n-1)/n        (RS + AG)
+  all-to-all:          bytes * (n-1)/n
+  collective-permute:  bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.1 = bf16[2,4096,1024]{2,1,0} all-gather(bf16[...] %x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return float(n * b)
+
+
+@dataclass
+class CollectiveStats:
+    # per-kind totals, already converted to wire bytes per participant
+    wire_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    result_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def to_dict(self) -> dict:
+        return {
+            "wire_bytes": dict(self.wire_bytes),
+            "result_bytes": dict(self.result_bytes),
+            "counts": dict(self.counts),
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        kind = kind.replace("-start", "")
+        out_bytes = _shape_bytes(dtype, dims)
+        n = max(_group_size(line, default_group), 1)
+        ring = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2 * out_bytes * ring
+        elif kind == "all-gather":
+            wire = out_bytes * ring
+        elif kind == "reduce-scatter":
+            wire = out_bytes * (n - 1)   # in_bytes*(n-1)/n; in = out*n
+        elif kind == "all-to-all":
+            wire = out_bytes * ring
+        else:  # collective-permute
+            wire = out_bytes
+        stats.wire_bytes[kind] += wire
+        stats.result_bytes[kind] += out_bytes
+        stats.counts[kind] += 1
+    return stats
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,79 @@
+"""Unit tests for layer characterization (paper §3.2)."""
+import math
+
+import pytest
+
+from repro.core import (LayerKind, LayerSpec, characterize_layer,
+                        characterize_model, variation_report)
+from repro.edge import edge_zoo
+
+
+def _conv(hw=56, cin=64, cout=64, k=3, s=1):
+    return LayerSpec(name="c", kind=LayerKind.CONV2D, in_hw=hw, in_ch=cin,
+                     out_ch=cout, kernel=k, stride=s)
+
+
+def test_conv_macs_and_params():
+    spec = _conv()
+    assert spec.param_count == 3 * 3 * 64 * 64
+    assert spec.macs == 56 * 56 * 64 * 9 * 64
+    c = characterize_layer("m", 0, spec)
+    # stride-1 3x3 conv FLOP/B (int8) is exactly 2 * HW^2
+    assert c.param_flop_per_byte == pytest.approx(2 * 56 * 56)
+
+
+def test_depthwise_params_small():
+    spec = LayerSpec(name="d", kind=LayerKind.DWCONV2D, in_hw=14, in_ch=384,
+                     kernel=3)
+    assert spec.param_count == 9 * 384
+    assert spec.macs == 14 * 14 * 384 * 9
+
+
+def test_lstm_gate_granularity():
+    # paper: each gate has ~2.1M params on average; clustering sees per-gate
+    spec = LayerSpec(name="l", kind=LayerKind.LSTM, in_features=1024,
+                     hidden=1024, seq_len=100)
+    assert spec.param_count == 4 * (1024 * 1024 + 1024 * 1024)
+    c = characterize_layer("m", 0, spec)
+    assert c.sched_param_bytes == pytest.approx(spec.param_bytes / 4)
+    # per-gate-per-step MACs = in*h + h*h
+    assert c.sched_macs == pytest.approx(2 * 1024 * 1024)
+    # parameters are touched once per step: FLOP/B == 2 (2 FLOPs per MAC, int8)
+    assert c.sched_flop_per_byte == pytest.approx(2.0)
+    assert c.recurrent
+
+
+def test_fc_flopb_is_two():
+    spec = LayerSpec(name="f", kind=LayerKind.FC, in_features=1024,
+                     out_features=1000)
+    c = characterize_layer("m", 0, spec)
+    assert c.param_flop_per_byte == pytest.approx(2.0)
+
+
+def test_lstm_footprint_up_to_70m_params():
+    # paper: LSTM layer footprints reach 70M parameters
+    zoo = edge_zoo()
+    biggest = max(l.param_count for g in zoo for l in g.layers
+                  if l.kind is LayerKind.LSTM)
+    assert 50e6 <= biggest <= 80e6
+
+
+def test_intra_model_variation_orders_of_magnitude():
+    """Paper: MACs vary 200x and FLOP/B 244x within single models."""
+    chars = []
+    for g in edge_zoo():
+        chars.extend(characterize_model(g))
+    rep = variation_report(chars)
+    max_flopb = max(v["flopb_variation_x"] for v in rep.values())
+    max_macs = max(v["mac_variation_x"] for v in rep.values())
+    assert max_flopb >= 200.0
+    assert max_macs >= 200.0
+
+
+def test_avg_lstm_transducer_layer_footprint():
+    """Paper: LSTM/Transducer layers average ~33.4 MB parameter footprint."""
+    zoo = edge_zoo()
+    foot = [l.param_bytes for g in zoo if g.family in ("lstm", "transducer")
+            for l in g.layers if l.kind is LayerKind.LSTM]
+    avg_mb = sum(foot) / len(foot) / (1024 * 1024)
+    assert 15.0 <= avg_mb <= 50.0

@@ -1,0 +1,64 @@
+"""Clustering tests (paper §5.1): five clusters, high coverage, k-means agreement."""
+import collections
+
+from repro.core import (agreement, characterize_zoo, cluster_all, rule_cluster,
+                        strict_fraction)
+from repro.core.layerspec import LayerKind
+from repro.edge import edge_zoo
+
+
+def _chars():
+    return characterize_zoo(edge_zoo())
+
+
+def test_all_layers_assigned_1_to_5():
+    for c in _chars():
+        cl = rule_cluster(c).cluster
+        assert 1 <= cl <= 5
+
+
+def test_five_clusters_all_populated():
+    counts = collections.Counter(a.cluster for a in cluster_all(_chars()))
+    assert set(counts) == {1, 2, 3, 4, 5}
+    for cid, n in counts.items():
+        assert n >= 5, f"cluster {cid} nearly empty ({n})"
+
+
+def test_coverage_fraction():
+    """Paper: 97% of layers group into the five clusters. The published bounds
+    are rounded descriptors; with a modest pad they cover >=90% of weighty
+    layers, literal boxes >=30%."""
+    chars = _chars()
+    assert strict_fraction(chars, pad=1.0) >= 0.30
+    assert strict_fraction(chars, pad=2.5) >= 0.70
+    assert strict_fraction(chars, pad=4.0) >= 0.85
+
+
+def test_structural_priors():
+    chars = _chars()
+    for c in chars:
+        cl = rule_cluster(c).cluster
+        if c.kind is LayerKind.LSTM:
+            assert cl == 3, f"LSTM layer {c.name} -> cluster {cl}"
+        if c.kind is LayerKind.DWCONV2D:
+            assert cl == 5, f"depthwise layer {c.name} -> cluster {cl}"
+
+
+def test_kmeans_agreement_with_rules():
+    """k-means on log-features should substantially agree with the rule
+    clusters — the structure is in the data (paper's 'natural grouping')."""
+    chars = [c for c in _chars() if c.param_bytes > 256 and c.macs > 0]
+    assert agreement(chars) >= 0.55
+
+
+def test_clusters_match_paper_populations():
+    """C1/2 are convs, C3 recurrent/FC, C5 depthwise-dominated."""
+    chars = _chars()
+    kinds_by_cluster = collections.defaultdict(collections.Counter)
+    for c in chars:
+        kinds_by_cluster[rule_cluster(c).cluster][c.kind] += 1
+    c5 = kinds_by_cluster[5]
+    assert c5[LayerKind.DWCONV2D] >= 0.5 * sum(c5.values())
+    c3 = kinds_by_cluster[3]
+    rec_fc = c3[LayerKind.LSTM] + c3[LayerKind.FC] + c3[LayerKind.EMBEDDING]
+    assert rec_fc >= 0.8 * sum(c3.values())

@@ -1,0 +1,124 @@
+"""Two-phase scheduler tests (paper §4.2) + property tests on its invariants."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (CLUSTER_TO_ACCELERATOR, JACQUARD, MENSA_ACCELERATORS,
+                        PASCAL, PAVLOV, LayerKind, LayerSpec, MensaScheduler,
+                        ModelGraph, characterize_model, rule_cluster,
+                        schedule_cost)
+from repro.edge import edge_zoo
+
+
+def test_phase1_follows_cluster_map():
+    g = edge_zoo()[0]
+    sched = MensaScheduler()
+    p1, clusters = sched.phase1(g)
+    for acc, cl in zip(p1, clusters):
+        assert acc.name == CLUSTER_TO_ACCELERATOR[cl].name
+
+
+def test_lstm_layers_go_to_pavlov():
+    g = [m for m in edge_zoo() if m.family == "lstm"][0]
+    s = MensaScheduler().schedule(g)
+    for spec, acc in zip(g.layers, s.mapping):
+        if spec.kind is LayerKind.LSTM:
+            assert acc.name == PAVLOV.name
+
+
+def test_conv_heavy_layers_go_to_pascal():
+    g = [m for m in edge_zoo() if m.family == "cnn"][0]
+    s = MensaScheduler().schedule(g)
+    pascal_flops = sum(spec.flops for spec, a in zip(g.layers, s.mapping)
+                       if a.name == PASCAL.name)
+    assert pascal_flops > 0.5 * g.total_flops
+
+
+def test_phase2_never_worsens_total_cost():
+    """Phase 2 only remaps when its local EDP heuristic improves; verify the
+    global schedule cost does not regress on any zoo model."""
+    sched = MensaScheduler()
+    for g in edge_zoo():
+        p1, _ = sched.phase1(g)
+        p2, _ = sched.phase2(g, p1)
+        c1 = schedule_cost(g, p1, MENSA_ACCELERATORS)
+        c2 = schedule_cost(g, p2, MENSA_ACCELERATORS)
+        edp1 = c1.latency_s * c1.energy.total
+        edp2 = c2.latency_s * c2.energy.total
+        assert edp2 <= edp1 * 1.05, f"{g.name}: phase2 regressed EDP"
+
+
+def test_phase2_reduces_transfers():
+    sched = MensaScheduler()
+    for g in edge_zoo():
+        p1, _ = sched.phase1(g)
+        p2, _ = sched.phase2(g, p1)
+        x1 = schedule_cost(g, p1, MENSA_ACCELERATORS).transfer_bytes
+        x2 = schedule_cost(g, p2, MENSA_ACCELERATORS).transfer_bytes
+        assert x2 <= x1
+
+
+def test_cost_policy_schedules_every_layer():
+    sched = MensaScheduler(policy="cost")
+    for g in edge_zoo()[:4]:
+        s = sched.schedule(g)
+        assert len(s.mapping) == len(g.layers)
+        assert all(a in MENSA_ACCELERATORS for a in s.mapping)
+
+
+# ------------------------------------------------------------------ property
+@st.composite
+def random_chain(draw):
+    n = draw(st.integers(min_value=2, max_value=12))
+    layers = []
+    for i in range(n):
+        kind = draw(st.sampled_from([LayerKind.CONV2D, LayerKind.PWCONV2D,
+                                     LayerKind.DWCONV2D, LayerKind.FC,
+                                     LayerKind.LSTM]))
+        if kind in (LayerKind.CONV2D, LayerKind.PWCONV2D, LayerKind.DWCONV2D):
+            hw = draw(st.sampled_from([7, 14, 28, 56]))
+            cin = draw(st.sampled_from([16, 64, 256]))
+            cout = draw(st.sampled_from([16, 64, 256]))
+            layers.append(LayerSpec(name=f"l{i}", kind=kind, in_hw=hw,
+                                    in_ch=cin, out_ch=cout, kernel=3))
+        elif kind is LayerKind.FC:
+            layers.append(LayerSpec(name=f"l{i}", kind=kind,
+                                    in_features=draw(st.sampled_from([256, 2048])),
+                                    out_features=draw(st.sampled_from([256, 4096]))))
+        else:
+            layers.append(LayerSpec(name=f"l{i}", kind=kind,
+                                    in_features=draw(st.sampled_from([128, 1024])),
+                                    hidden=draw(st.sampled_from([128, 1024])),
+                                    seq_len=draw(st.sampled_from([10, 100]))))
+    return ModelGraph("rand", "cnn", layers)
+
+
+@given(random_chain())
+@settings(max_examples=40, deadline=None)
+def test_scheduler_total_and_valid_on_random_graphs(graph):
+    """Property: every layer gets exactly one accelerator from the system;
+    schedule cost is finite and positive; clusters are in range."""
+    sched = MensaScheduler()
+    s = sched.schedule(graph)
+    assert len(s.mapping) == len(graph.layers)
+    assert all(a in MENSA_ACCELERATORS for a in s.mapping)
+    assert all(1 <= c <= 5 for c in s.clusters)
+    cost = sched.evaluate(graph)
+    assert cost.latency_s > 0 and cost.energy.total > 0
+    assert cost.latency_s < 1e4
+
+
+@given(random_chain())
+@settings(max_examples=20, deadline=None)
+def test_mensa_never_catastrophically_worse_than_best_single(graph):
+    """Property: the greedy two-phase schedule is never catastrophically worse
+    (>4x EDP) than the best single Mensa accelerator running the whole graph.
+    (The paper's algorithm is locally greedy — phase 1 ignores transfers and
+    phase 2 only remaps pairwise — so small constant-factor regressions on
+    adversarial graphs are possible by design.)"""
+    sched = MensaScheduler(policy="cost")
+    het = sched.evaluate(graph)
+    best = min(
+        (schedule_cost(graph, [a] * len(graph.layers), MENSA_ACCELERATORS)
+         for a in MENSA_ACCELERATORS),
+        key=lambda c: c.latency_s * c.energy.total)
+    assert het.latency_s * het.energy.total <= 4.0 * best.latency_s * best.energy.total

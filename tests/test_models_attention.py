@@ -1,0 +1,116 @@
+"""Attention core tests: flash == reference, local == reference-with-window,
+decode path == forward path, across shapes/dtypes (hypothesis sweeps)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models.attention import (KVCache, decode_attention, flash_attention,
+                                    init_kv_cache, local_attention,
+                                    reference_attention)
+
+
+def _rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,skv,h,kvh,hd,block", [
+    (16, 16, 4, 4, 8, 8),        # MHA
+    (32, 32, 8, 2, 16, 16),      # GQA
+    (24, 24, 6, 1, 32, 7),       # MQA + non-dividing block
+    (8, 40, 4, 2, 8, 16),        # cross-length (q continues a cache)
+])
+def test_flash_matches_reference(dtype, sq, skv, h, kvh, hd, block):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(k1, 1, sq, h, hd, dtype=dtype)
+    k = _rand(k2, 1, skv, kvh, hd, dtype=dtype)
+    v = _rand(k3, 1, skv, kvh, hd, dtype=dtype)
+    off = skv - sq
+    out = flash_attention(q, k, v, causal=True, block_kv=block, q_offset=off)
+    ref = reference_attention(q, k, v, causal=True, q_offset=off)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [4, 8, 16])
+def test_flash_sliding_window_matches_reference(window):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    s, h, hd = 32, 4, 8
+    q = _rand(k1, 2, s, h, hd)
+    k = _rand(k2, 2, s, h, hd)
+    v = _rand(k3, 2, s, h, hd)
+    out = flash_attention(q, k, v, causal=True, window=window, block_kv=8)
+    ref = reference_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("s,window,h,kvh", [(32, 8, 4, 2), (64, 16, 4, 1),
+                                            (32, 16, 8, 8)])
+def test_local_attention_matches_reference(s, window, h, kvh):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    hd = 8
+    q = _rand(k1, 2, s, h, hd)
+    k = _rand(k2, 2, s, kvh, hd)
+    v = _rand(k3, 2, s, kvh, hd)
+    out = local_attention(q, k, v, window=window)
+    ref = reference_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_decode_matches_full_attention():
+    """Decoding positions one by one against the cache reproduces the causal
+    full-attention outputs."""
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    b, s, h, kvh, hd = 2, 12, 4, 2, 8
+    q = _rand(k1, b, s, h, hd)
+    k = _rand(k2, b, s, kvh, hd)
+    v = _rand(k3, b, s, kvh, hd)
+    ref = reference_attention(q, k, v, causal=True)
+    cache = init_kv_cache(b, s, kvh, hd, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        o, cache = decode_attention(q[:, t:t + 1], k[:, t:t + 1],
+                                    v[:, t:t + 1], cache)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(got, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_decode_with_ring_window_matches_local():
+    key = jax.random.PRNGKey(4)
+    k1, k2, k3 = jax.random.split(key, 3)
+    b, s, h, kvh, hd, w = 1, 24, 2, 1, 8, 8
+    q = _rand(k1, b, s, h, hd)
+    k = _rand(k2, b, s, kvh, hd)
+    v = _rand(k3, b, s, kvh, hd)
+    ref = reference_attention(q, k, v, causal=True, window=w)
+    cache = init_kv_cache(b, w, kvh, hd, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        o, cache = decode_attention(q[:, t:t + 1], k[:, t:t + 1],
+                                    v[:, t:t + 1], cache, window=w)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(got, ref, atol=1e-5, rtol=1e-5)
+
+
+@given(
+    sq=st.integers(2, 24), h_groups=st.sampled_from([(4, 4), (4, 2), (6, 1)]),
+    hd=st.sampled_from([4, 8, 16]), block=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_flash_property_sweep(sq, h_groups, hd, block, seed):
+    h, kvh = h_groups
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = _rand(k1, 1, sq, h, hd)
+    k = _rand(k2, 1, sq, kvh, hd)
+    v = _rand(k3, 1, sq, kvh, hd)
+    out = flash_attention(q, k, v, causal=True, block_kv=block)
+    ref = reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,67 @@
+"""Validation of the paper's headline claims (§7) over our reconstructed zoo.
+
+Tolerances are deliberately loose-but-meaningful: the 24 Google models are not
+public, so our zoo is a reconstruction from the paper's published statistics;
+we require every headline ratio to land in the right regime and the exact
+values are reported side-by-side in EXPERIMENTS.md.
+"""
+import pytest
+
+from repro.core import evaluate_zoo, summarize
+from repro.edge import edge_zoo
+
+
+@pytest.fixture(scope="module")
+def summary():
+    return summarize(evaluate_zoo(edge_zoo()))
+
+
+def test_zoo_composition():
+    zoo = edge_zoo()
+    assert len(zoo) == 24
+    fams = [g.family for g in zoo]
+    assert fams.count("cnn") == 13
+    assert fams.count("lstm") == 4
+    assert fams.count("transducer") == 4
+    assert fams.count("rcnn") == 3
+
+
+def test_mensa_energy_reduction(summary):
+    # paper: 66.0%
+    assert 0.55 <= summary.energy_reduction_vs_baseline <= 0.75
+
+
+def test_mensa_energy_efficiency(summary):
+    # paper: 3.0x vs baseline, 2.4x vs Eyeriss v2
+    assert 2.4 <= summary.energy_eff_x_vs_baseline <= 3.6
+    assert 1.8 <= summary.energy_eff_x_vs_eyeriss <= 3.2
+
+
+def test_mensa_throughput(summary):
+    # paper: 3.1x vs baseline, 1.3x vs Base+HB, 4.3x vs Eyeriss v2
+    assert 2.4 <= summary.throughput_x_vs_baseline <= 3.8
+    assert 1.1 <= summary.throughput_x_vs_base_hb <= 1.6
+    assert 3.2 <= summary.throughput_x_vs_eyeriss <= 6.5
+
+
+def test_mensa_latency(summary):
+    # paper: 1.96x vs baseline, 1.17x vs Base+HB
+    assert 1.6 <= summary.latency_x_vs_baseline <= 3.2
+    assert 1.05 <= summary.latency_x_vs_base_hb <= 1.45
+
+
+def test_base_hb_alone_insufficient(summary):
+    # paper: Base+HB reduces energy only 7.5% despite 2.5x throughput
+    assert summary.base_hb_energy_reduction <= 0.20
+    assert 1.7 <= summary.base_hb_throughput_x <= 3.0
+
+
+def test_baseline_underutilization(summary):
+    # paper: 27.3% average utilization; LSTMs/Transducers < 1%
+    assert 0.15 <= summary.baseline_mean_utilization <= 0.40
+    assert summary.lstm_transducer_baseline_util < 0.02
+
+
+def test_lstm_transducer_gain(summary):
+    # paper: 5.7x throughput for LSTMs/Transducers
+    assert 4.0 <= summary.lstm_transducer_throughput_x <= 8.0

@@ -1,0 +1,227 @@
+"""Runtime substrate tests: data determinism/resume, checkpoint atomicity +
+auto-resume, failure injection, watchdog, serving engine parity, optimizer."""
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt_lib
+from repro.configs import reduced_config
+from repro.data.pipeline import DataConfig, PrefetchingLoader, SyntheticTokens
+from repro.ft.watchdog import (FailureInjector, InjectedFailure, StepWatchdog,
+                               run_with_restarts)
+from repro.models import build_model
+from repro.train import optim
+
+
+# ---------------------------------------------------------------------- data
+def test_data_deterministic_and_stateless():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8)
+    src = SyntheticTokens(cfg)
+    b1 = src.batch(7)
+    b2 = SyntheticTokens(cfg).batch(7)       # fresh instance, same step
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 32)
+    assert b1["labels"].shape == (8, 32)
+    # next-token alignment
+    full = SyntheticTokens(DataConfig(1000, 33, 8)).batch(7)
+    assert not np.array_equal(b1["tokens"], b1["labels"])
+
+
+def test_data_steps_differ():
+    src = SyntheticTokens(DataConfig(1000, 32, 8))
+    assert not np.array_equal(src.batch(0)["tokens"], src.batch(1)["tokens"])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    whole = SyntheticTokens(DataConfig(1000, 16, 8)).batch(3)["tokens"]
+    parts = [SyntheticTokens(DataConfig(1000, 16, 8, num_hosts=4, host_id=h)
+                             ).batch(3)["tokens"] for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), whole)
+
+
+def test_prefetch_loader_resume():
+    src = SyntheticTokens(DataConfig(1000, 16, 4))
+    loader = PrefetchingLoader(src, start_step=5, prefetch=2)
+    step, batch = next(loader)
+    assert step == 5
+    np.testing.assert_array_equal(batch["tokens"], src.batch(5)["tokens"])
+    loader.close()
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_ckpt_roundtrip_and_latest(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.bfloat16), jnp.zeros((), jnp.int32)]}
+    ckpt_lib.save(tmp_path, 10, tree)
+    ckpt_lib.save(tmp_path, 20, jax.tree.map(lambda x: x + 1, tree))
+    assert ckpt_lib.latest_step(tmp_path) == 20
+    got = ckpt_lib.restore(tmp_path, 10, jax.eval_shape(lambda: tree))
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    assert got["b"][0].dtype == jnp.bfloat16
+
+
+def test_ckpt_ignores_partial_writes(tmp_path):
+    tree = {"x": jnp.ones((3,))}
+    ckpt_lib.save(tmp_path, 5, tree)
+    # simulate a crash mid-write at step 7: only a .tmp dir exists
+    (tmp_path / "step_00000007.tmp").mkdir()
+    (tmp_path / "step_00000007.tmp" / "junk").write_text("partial")
+    assert ckpt_lib.latest_step(tmp_path) == 5
+
+
+def test_ckpt_latest_falls_back_to_scan(tmp_path):
+    tree = {"x": jnp.ones((3,))}
+    ckpt_lib.save(tmp_path, 5, tree)
+    (tmp_path / "LATEST").unlink()
+    assert ckpt_lib.latest_step(tmp_path) == 5
+
+
+# ------------------------------------------------------------ fault tolerance
+def test_failure_injection_and_restart_resumes_exactly(tmp_path):
+    """Loss trace with an injected failure + restart == uninterrupted trace."""
+    from repro.launch.train import train_once
+    cfg = reduced_config("smollm-135m").replace(num_layers=2)
+    kw = dict(steps=12, global_batch=4, seq_len=32, ckpt_every=4,
+              log_every=100)
+
+    # uninterrupted reference
+    ref = train_once(cfg, ckpt_dir=str(tmp_path / "ref"), **kw)
+
+    # failure at step 9, restart from the step-8 checkpoint
+    injector = FailureInjector(fail_at_step=9)
+    metrics: list = []
+
+    def once():
+        train_once(cfg, ckpt_dir=str(tmp_path / "ft"), injector=injector,
+                   metrics_out=metrics, **kw)
+
+    restarts = run_with_restarts(once, max_restarts=2)
+    assert restarts == 1
+    final = dict(metrics)
+    for step in (9, 10, 11):
+        assert final[step] == pytest.approx(ref["losses"][step], rel=1e-5), \
+            f"step {step}: resumed {final[step]} != reference {ref['losses'][step]}"
+
+
+def test_watchdog_flags_persistent_straggler():
+    wd = StepWatchdog(consecutive=3)
+    for _ in range(20):
+        wd.observe(1.0)
+    assert wd.stragglers_detected == 0
+    flagged = False
+    for _ in range(4):
+        flagged |= wd.observe(10.0)
+    assert flagged and wd.stragglers_detected >= 1
+
+
+def test_watchdog_tolerates_single_blip():
+    wd = StepWatchdog(consecutive=3)
+    for _ in range(20):
+        wd.observe(1.0)
+    assert not wd.observe(8.0)
+    for _ in range(5):
+        wd.observe(1.0)
+    assert wd.stragglers_detected == 0
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    st = optim.adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, st = optim.adamw_update(g, st, params, lr=jnp.float32(0.05),
+                                     weight_decay=0.0)
+        params = optim.apply_updates(params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(optim.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules_shapes():
+    f = optim.cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert float(f(jnp.int32(10))) == pytest.approx(1e-3)
+    assert float(f(jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+
+
+# -------------------------------------------------------------------- serving
+def test_serve_engine_batched_requests():
+    from repro.serve.engine import Request, ServeEngine
+    cfg = reduced_config("qwen3-0.6b").replace(num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, slots=2, max_len=64)
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=5)
+            for i in range(5)]
+    done = engine.run(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.generated) == 5 for r in done)
+
+
+def test_serve_engine_matches_direct_decode():
+    """Engine output == manual prefill+decode for a single request."""
+    from repro.serve.engine import Request, ServeEngine
+    cfg = reduced_config("qwen3-0.6b").replace(num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = [5, 9, 2, 7]
+    n_new = 4
+
+    engine = ServeEngine(model, params, slots=2, max_len=32)
+    (req,) = engine.run([Request(rid=0, prompt=prompt, max_new_tokens=n_new)])
+
+    states = model.init_states(1, 32)
+    logits, states, memory = model.prefill(
+        params, jnp.asarray([prompt], jnp.int32), states)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        logits, states = model.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), states,
+            jnp.asarray([pos], jnp.int32), memory)
+        toks.append(int(jnp.argmax(logits[0, 0])))
+        pos += 1
+    assert req.generated == toks
+
+
+# -------------------------------------------------------- Level-B Mensa plan
+def test_strategy_planner_outputs():
+    from repro.core.strategy import plan
+    from repro.configs import get_config
+    p = plan(get_config("smollm-135m"), tokens=256 * 4096, batch=256,
+             train=True, shape_name="train_4k")
+    assert p.strategy_for("attn") == "pascal_dp"   # 9 heads % 16 != 0
+    assert p.strategy_for("embed") == "jacquard_shard"
+    p2 = plan(get_config("starcoder2-7b"), tokens=256 * 4096, batch=256,
+              train=True)
+    assert p2.strategy_for("ffn") == "pascal_tp"   # 7B replicated won't fit
+    p3 = plan(get_config("phi3.5-moe-42b-a6.6b"), tokens=256 * 4096,
+              batch=256, train=True)
+    assert p3.strategy_for("moe") == "jacquard_shard"
+    p4 = plan(get_config("falcon-mamba-7b"), tokens=256 * 4096, batch=256,
+              train=True)
+    assert p4.strategy_for("ssm") == "pavlov_seq"
+
+
+def test_strategy_planner_clusters_match_paper_semantics():
+    from repro.core.strategy import plan
+    from repro.configs import get_config
+    p = plan(get_config("falcon-mamba-7b"), tokens=256 * 4096, batch=256,
+             train=True)
+    ssm = [b for b in p.blocks if b.name == "ssm"][0]
+    assert ssm.cluster == 3      # recurrent layers are the paper's Cluster 3

@@ -25,7 +25,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, SHAPES, applicable, get_config
-from repro.utils.hlo import parse_collectives
+from repro.utils.hlo import normalize_cost_analysis, parse_collectives
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "roofline"
 
@@ -72,7 +72,7 @@ def run_cell(arch: str, shape_name: str, out_dir: Path = RESULTS,
         with mesh:
             lowered = jax.jit(fn).lower(*args)
             compiled = lowered.compile()
-            cost = compiled.cost_analysis()
+            cost = normalize_cost_analysis(compiled.cost_analysis())
             hlo = compiled.as_text()
         coll = parse_collectives(hlo, default_group=256)
         flops_dev = float(cost.get("flops", 0.0))

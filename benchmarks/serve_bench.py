@@ -1,0 +1,102 @@
+"""Serving-engine benchmark: drive the bucketed continuous-batching engine
+with a synthetic mixed-length request trace and report engine metrics as JSON.
+
+Phase 1 (warmup) compiles one prefill program per bucket plus the decode
+program; phase 2 (measure) replays a fresh trace over the same buckets and
+must trigger **zero** recompiles — the acceptance gate for the bucketed
+prefill path — while reporting TTFT, decode-step latency, tokens/s, slot
+occupancy, and per-bucket padding overhead.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py
+  PYTHONPATH=src python benchmarks/serve_bench.py --arch recurrentgemma-2b \\
+      --requests 24 --slots 4 --json results/serve_bench.json
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+
+def make_trace(n: int, vocab: int, lengths: list[int], max_new: int,
+               seed: int):
+    from repro.serve.engine import Request
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        ln = lengths[i % len(lengths)]
+        ln = max(1, ln + int(rng.randint(-2, 3)))       # jitter within bucket
+        reqs.append(Request(rid=i,
+                            prompt=rng.randint(1, vocab, ln).tolist(),
+                            max_new_tokens=max_new))
+    return reqs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=18)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--json", default="", help="also write the report here")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, reduced_config
+    from repro.launch.serve import build_engine
+
+    cfg = reduced_config(args.arch)
+    engine = build_engine(cfg, slots=args.slots, max_len=args.max_len,
+                          plan_cfg=get_config(args.arch))
+    # lengths spanning >= 3 buckets (16 / 32 / 64 at the default min_bucket)
+    lengths = [5, 14, 20, 30, 40, 60]
+    usable = [b for b in (16, 32, 64) if b <= args.max_len]
+    assert len(usable) >= 3, (
+        f"--max-len {args.max_len} spans only prefill buckets {usable}; "
+        f"the trace needs >= 3 (use --max-len >= 64)")
+
+    warm = make_trace(max(6, args.slots), cfg.vocab_size, lengths,
+                      args.max_new, seed=0)
+    engine.run(warm)
+    warm_summary = engine.stats.summary()
+    # guard against a vacuous gate: if jit compile counters are unavailable
+    # (private _cache_size dropped by a JAX upgrade) they read 0 everywhere
+    # and 0 - 0 == 0 would "pass" even while every prefill recompiles
+    assert warm_summary["prefill_compiles"] > 0, (
+        "compile counters unavailable — cannot certify the zero-recompile "
+        "gate on this JAX version")
+
+    engine.reset_stats()
+    engine.run(make_trace(args.requests, cfg.vocab_size, lengths,
+                          args.max_new, seed=1))
+    s = engine.stats.summary()
+
+    recompiles = (s["prefill_compiles"] - warm_summary["prefill_compiles"]) \
+        + (s["decode_compiles"] - warm_summary["decode_compiles"])
+    report = {
+        "arch": args.arch,
+        "slots": args.slots,
+        "buckets": list(engine.buckets),
+        "warmup": {
+            "prefill_compiles": warm_summary["prefill_compiles"],
+            "decode_compiles": warm_summary["decode_compiles"],
+            "bucket_counts": warm_summary["bucket_counts"],
+        },
+        "measure": s,
+        "recompiles_after_warmup": recompiles,
+    }
+    out = json.dumps(report, indent=1)
+    print(out)
+    if args.json:
+        p = Path(args.json)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(out)
+    assert recompiles == 0, \
+        f"{recompiles} recompiles after warmup — bucketing is broken"
+
+
+if __name__ == "__main__":
+    main()

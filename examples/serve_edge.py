@@ -1,24 +1,23 @@
 """Serving example: batched requests through the continuous-batching engine,
 with the Mensa view of the workload (prefill = compute-centric Pascal phase,
-decode = memory-centric Jacquard/Pavlov phase).
+decode = memory-centric Jacquard/Pavlov phase) — each phase lowers as its own
+jitted program with its own execution profile, and prompts are padded to
+power-of-two buckets so every prefill shape compiles exactly once.
 
   PYTHONPATH=src python examples/serve_edge.py --arch qwen3-0.6b --requests 6
 """
 import argparse
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-import jax
 import numpy as np
 
-from repro.configs import reduced_config
-from repro.core.strategy import plan
-from repro.configs import get_config
-from repro.models import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.configs import get_config, reduced_config
+from repro.core.executor import phase_profiles
+from repro.launch.serve import build_engine
+from repro.serve.engine import Request
 
 
 def main() -> None:
@@ -29,29 +28,30 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
 
-    # the pod-scale serving plan for this arch (decode_32k shape)
-    p = plan(get_config(args.arch), tokens=128, batch=128, train=False,
-             shape_name="decode_32k")
-    print(p.summary())
+    # the pod-scale per-phase serving plans for this arch
+    prefill_prof, decode_prof = phase_profiles(get_config(args.arch))
+    print(prefill_prof.plan.summary())
+    print(f"prefill overrides={prefill_prof.cfg_overrides} | "
+          f"decode overrides={decode_prof.cfg_overrides}")
 
     cfg = reduced_config(args.arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, slots=args.slots, max_len=128)
+    engine = build_engine(cfg, slots=args.slots, max_len=128,
+                          profiles=(prefill_prof, decode_prof))
 
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i,
                     prompt=rng.randint(1, cfg.vocab_size, 4 + i % 5).tolist(),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
-    t0 = time.perf_counter()
     done = engine.run(reqs)
-    dt = time.perf_counter() - t0
-    n_tokens = sum(len(r.generated) for r in done)
     for r in done[:3]:
         print(f"req {r.rid}: prompt {r.prompt} -> {r.generated}")
-    print(f"\nserved {len(done)} requests / {n_tokens} tokens in {dt:.2f}s "
-          f"({n_tokens / dt:.1f} tok/s on CPU with {args.slots} slots)")
+    s = engine.stats.summary()
+    print(f"\nserved {s['requests_completed']} requests / "
+          f"{s['tokens_generated']} tokens "
+          f"({s['tokens_per_s']:.1f} tok/s on CPU with {args.slots} slots, "
+          f"ttft p50 {s['ttft_ms']['p50']:.0f}ms, "
+          f"{s['prefill_compiles']} prefill compiles)")
     assert all(r.done for r in done)
     print("serve_edge OK")
 

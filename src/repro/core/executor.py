@@ -26,6 +26,15 @@ from ..models.model_config import ArchConfig
 from .strategy import MensaPlan, MeshShape, plan
 
 
+# overrides that change only how a program lowers, never parameter shapes —
+# the serving engine shares one param tree across its prefill/decode programs,
+# so per-phase profiles may apply only these
+RUNTIME_SAFE_KEYS = frozenset({
+    "remat", "moe_impl", "unroll_scans", "scan_chunk", "attn_block_kv",
+    "attn_f32",
+})
+
+
 @dataclass(frozen=True)
 class ExecutionProfile:
     arch: str
@@ -34,8 +43,12 @@ class ExecutionProfile:
     cfg_overrides: dict = field(default_factory=dict)
     plan: MensaPlan | None = None
 
-    def apply(self, cfg: ArchConfig) -> ArchConfig:
-        return cfg.replace(**self.cfg_overrides) if self.cfg_overrides else cfg
+    def apply(self, cfg: ArchConfig, *, runtime_only: bool = False
+              ) -> ArchConfig:
+        ov = self.cfg_overrides
+        if runtime_only:
+            ov = {k: v for k, v in ov.items() if k in RUNTIME_SAFE_KEYS}
+        return cfg.replace(**ov) if ov else cfg
 
 
 def plan_for_cell(cfg: ArchConfig, shape: ShapeSpec,
@@ -69,3 +82,18 @@ def execution_profile(cfg: ArchConfig, shape: ShapeSpec,
         # gate params, faithful to Griffin's block-diagonal design
         overrides["rglru_gate_blocks"] = mesh.model
     return ExecutionProfile(cfg.name, shape.name, strategy, overrides, p)
+
+
+def phase_profiles(cfg: ArchConfig,
+                   prefill_shape: ShapeSpec | None = None,
+                   decode_shape: ShapeSpec | None = None,
+                   mesh: MeshShape = MeshShape()
+                   ) -> tuple[ExecutionProfile, ExecutionProfile]:
+    """Per-phase serving profiles: prefill lowers compute-centric (Pascal
+    cluster), decode memory-centric (Jacquard/Pavlov clusters).  The serving
+    engine builds one jitted program per phase from these."""
+    from ..configs.shapes import SHAPES
+    return (execution_profile(cfg, prefill_shape or SHAPES["prefill_32k"],
+                              mesh),
+            execution_profile(cfg, decode_shape or SHAPES["decode_32k"],
+                              mesh))

@@ -73,7 +73,8 @@ def summarize(results: list[ModelResult]) -> ZooSummary:
         return [num(r) / max(den(r), 1e-30) for r in results]
 
     lstm_tr = [r for r in results if r.family in ("lstm", "transducer")]
-    base_util = [r.baseline.throughput_flops / 2e12 for r in results]
+    peak = EDGE_TPU.peak_flops
+    base_util = [r.baseline.throughput_flops / peak for r in results]
     return ZooSummary(
         energy_reduction_vs_baseline=1 - geomean(
             ratios(lambda r: r.mensa.energy.total, lambda r: r.baseline.energy.total)),
@@ -107,5 +108,6 @@ def summarize(results: list[ModelResult]) -> ZooSummary:
             [r.mensa.throughput_flops / max(r.baseline.throughput_flops, 1e-30)
              for r in lstm_tr]) if lstm_tr else 0.0,
         lstm_transducer_baseline_util=float(np.mean(
-            [r.baseline.throughput_flops / 2e12 for r in lstm_tr])) if lstm_tr else 0.0,
+            [r.baseline.throughput_flops / peak
+             for r in lstm_tr])) if lstm_tr else 0.0,
     )

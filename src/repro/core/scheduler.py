@@ -5,13 +5,16 @@ its cluster (driver configuration knowledge: cluster characteristics + which
 accelerator serves which cluster).  A cost-based mode (`policy="cost"`) instead
 argmins an energy-delay product per layer, which is useful for ablations.
 
-Phase 2 — communication-aware remap: walking the DAG in topological order, if a
-layer's phase-1 accelerator differs from its predecessor's, compare
-  (a) keep: transfer cost (DRAM round-trip of the edge activation) + layer cost
-      on its optimal accelerator, vs.
-  (b) move: layer cost on the predecessor's accelerator (no transfer).
-and remap the layer when (b) is cheaper.  Cost = energy-delay product, the same
-heuristic currency as phase 1.
+Phase 2 — communication-aware remap: walking the DAG in topological order,
+each node is priced once against the full set of its in-edges.  For every
+candidate accelerator (the node's current one plus each distinct predecessor
+accelerator) the cost is the node's layer cost on that candidate plus the
+transfer cost (DRAM round-trip of the edge activation) of every in-edge whose
+predecessor sits elsewhere; the node lands on the cheapest candidate.  Cost =
+energy-delay product, the same heuristic currency as phase 1.  (Aggregating
+all in-edges per node — rather than greedily per edge — keeps multi-
+predecessor nodes from flipping accelerators repeatedly while ignoring the
+transfer cost of their other in-edges.)
 """
 from __future__ import annotations
 
@@ -85,23 +88,45 @@ class MensaScheduler:
     def phase2(self, graph: ModelGraph,
                mapping: list[AcceleratorConfig]) -> tuple[list[AcceleratorConfig], int]:
         ep = self.energy
+        graph.validate()      # the walk below relies on edges having s < d
         out = list(mapping)
         n_moved = 0
+        preds: dict[int, list[int]] = {}
         for (s, d) in graph.edges:
-            if out[s].name == out[d].name:
+            preds.setdefault(d, []).append(s)
+
+        def node_edp(d: int, acc: AcceleratorConfig) -> float:
+            """EDP of layer d on `acc`, including every in-edge transfer."""
+            c = layer_cost(graph.layers[d], acc, ep)
+            t_xfer, e_xfer = 0.0, 0.0
+            for p in preds[d]:
+                if out[p].name == acc.name:
+                    continue
+                edge_bytes = graph.layers[p].out_act_bytes
+                bw = min(out[p].dram_bw, acc.dram_bw)
+                t_xfer += 2 * edge_bytes / bw
+                e_xfer += edge_bytes * (ep.e_dram(out[p].dram_kind)
+                                        + ep.e_dram(acc.dram_kind))
+            return _edp(c.latency_s + t_xfer, c.energy.total + e_xfer)
+
+        # edges are topologically ordered (s < d), so walking nodes in index
+        # order always sees each predecessor's final placement first
+        for d in range(len(graph.layers)):
+            if d not in preds:
                 continue
-            spec_d = graph.layers[d]
-            edge_bytes = graph.layers[s].out_act_bytes
-            bw = min(out[s].dram_bw, out[d].dram_bw)
-            t_xfer = 2 * edge_bytes / bw
-            e_xfer = edge_bytes * (ep.e_dram(out[s].dram_kind)
-                                   + ep.e_dram(out[d].dram_kind))
-            c_keep = layer_cost(spec_d, out[d], ep)
-            c_move = layer_cost(spec_d, out[s], ep)
-            keep = _edp(c_keep.latency_s + t_xfer, c_keep.energy.total + e_xfer)
-            move = _edp(c_move.latency_s, c_move.energy.total)
-            if move < keep:
-                out[d] = out[s]
+            keep = out[d]
+            best_acc, best_v = keep, node_edp(d, keep)
+            seen = {keep.name}
+            for p in preds[d]:
+                cand = out[p]
+                if cand.name in seen:
+                    continue
+                seen.add(cand.name)
+                v = node_edp(d, cand)
+                if v < best_v:
+                    best_acc, best_v = cand, v
+            if best_acc.name != keep.name:
+                out[d] = best_acc
                 n_moved += 1
         return out, n_moved
 

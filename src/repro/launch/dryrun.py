@@ -26,7 +26,7 @@ from ..configs import ARCHS, SHAPES, ShapeSpec, applicable, get_config
 from ..models import build_model
 from ..train import optim
 from ..train.trainer import make_train_step
-from ..utils.hlo import parse_collectives
+from ..utils.hlo import normalize_cost_analysis, parse_collectives
 from . import shardings as sh
 from .mesh import data_axes, make_production_mesh
 
@@ -173,7 +173,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = normalize_cost_analysis(compiled.cost_analysis())
             hlo = compiled.as_text()
         n_dev = int(np.prod(list(mesh.shape.values())))
         coll = parse_collectives(hlo, default_group=n_dev)

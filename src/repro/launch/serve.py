@@ -1,4 +1,4 @@
-"""Serving driver: Mensa plan -> engine -> batched requests.
+"""Serving driver: per-phase Mensa plans -> engine -> batched requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \\
       --requests 8 --slots 4
@@ -6,15 +6,37 @@
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import numpy as np
 
-from ..configs import SHAPES, get_config, reduced_config
-from ..core.executor import execution_profile
+from ..configs import get_config, reduced_config
+from ..core.executor import phase_profiles
 from ..models import build_model
 from ..serve.engine import Request, ServeEngine
+
+
+def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
+                 min_bucket: int = 16, max_prefill_per_step: int = 1,
+                 plan_cfg=None, profiles=None) -> ServeEngine:
+    """Engine with the prefill/decode programs routed through their
+    Mensa execution profiles (runtime-safe overrides only — the phase models
+    share one parameter tree).  With today's cost model the serve-shape
+    profiles often carry no runtime-safe overrides; the routing is the hook
+    that picks them up as soon as measurement adds them.  Pass ``profiles``
+    (a (prefill, decode) pair) to reuse already-computed plans."""
+    prefill_prof, decode_prof = profiles or phase_profiles(plan_cfg or cfg)
+    model = build_model(cfg)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(0))
+    prefill_cfg = prefill_prof.apply(cfg, runtime_only=True)
+    decode_cfg = decode_prof.apply(cfg, runtime_only=True)
+    return ServeEngine(
+        model, params, slots=slots, max_len=max_len, min_bucket=min_bucket,
+        max_prefill_per_step=max_prefill_per_step,
+        prefill_model=build_model(prefill_cfg) if prefill_cfg != cfg else None,
+        decode_model=build_model(decode_cfg) if decode_cfg != cfg else None)
 
 
 def main() -> None:
@@ -25,30 +47,29 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--min-bucket", type=int, default=16)
     args = ap.parse_args()
 
-    prof = execution_profile(get_config(args.arch), SHAPES["decode_32k"])
-    print(f"[serve] Mensa plan for {args.arch}:")
-    print(prof.plan.summary())
-    print(f"[serve] strategy={prof.strategy} overrides={prof.cfg_overrides}")
+    plan_cfg = get_config(args.arch)
+    prefill_prof, decode_prof = phase_profiles(plan_cfg)
+    print(f"[serve] Mensa prefill plan for {args.arch}:")
+    print(prefill_prof.plan.summary())
+    print(f"[serve] prefill strategy={prefill_prof.strategy} "
+          f"overrides={prefill_prof.cfg_overrides}")
+    print(f"[serve] decode  strategy={decode_prof.strategy} "
+          f"overrides={decode_prof.cfg_overrides}")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    cfg = prof.apply(cfg)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, slots=args.slots,
-                         max_len=args.max_len)
+    engine = build_engine(cfg, slots=args.slots, max_len=args.max_len,
+                          min_bucket=args.min_bucket,
+                          profiles=(prefill_prof, decode_prof))
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i,
                     prompt=rng.randint(1, cfg.vocab_size, 4 + i % 6).tolist(),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
-    t0 = time.perf_counter()
-    done = engine.run(reqs)
-    dt = time.perf_counter() - t0
-    tok = sum(len(r.generated) for r in done)
-    print(f"[serve] {len(done)} requests, {tok} tokens, {dt:.2f}s "
-          f"({tok / dt:.1f} tok/s)")
+    engine.run(reqs)
+    print(json.dumps(engine.stats.summary(), indent=1))
 
 
 if __name__ == "__main__":

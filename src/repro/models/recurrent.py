@@ -28,11 +28,18 @@ from .common import fan_in_init, normal_init
 
 
 def _chunked_linear_scan(a, b, h0, chunk: int, unroll: bool = False):
-    """h_t = a_t * h_{t-1} + b_t along axis 1.  a,b: (B,S,...), h0: (B,...)."""
+    """h_t = a_t * h_{t-1} + b_t along axis 1.  a,b: (B,S,...), h0: (B,...).
+    S need not divide chunk: the tail is identity-padded (a=1, b=0), which
+    passes the state through unchanged, and the padded outputs are sliced
+    off."""
     B, S = a.shape[0], a.shape[1]
     chunk = min(chunk, S)
-    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
-    nc = S // chunk
+    pad = (-S) % chunk
+    if pad:
+        widths = ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)
+        a = jnp.pad(a, widths, constant_values=1.0)
+        b = jnp.pad(b, widths, constant_values=0.0)
+    nc = (S + pad) // chunk
     a_c = a.reshape((B, nc, chunk) + a.shape[2:])
     b_c = b.reshape((B, nc, chunk) + b.shape[2:])
 
@@ -50,20 +57,33 @@ def _chunked_linear_scan(a, b, h0, chunk: int, unroll: bool = False):
     h_last, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a_c, 1, 0),
                                          jnp.moveaxis(b_c, 1, 0)),
                               unroll=nc if unroll else 1)
-    hs = jnp.moveaxis(hs, 0, 1).reshape((B, S) + a.shape[2:])
-    return hs, h_last
+    hs = jnp.moveaxis(hs, 0, 1).reshape((B, S + pad) + a.shape[2:])
+    return hs[:, :S], h_last
 
 
-def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None,
+                  length: jax.Array | None = None):
     """Depthwise causal temporal conv.  x: (B,S,C), w: (K,C).
     ``state``: (B,K-1,C) trailing context from the previous segment (decode).
+    ``length``: (B,) valid prefix lengths for right-padded x — the returned
+    state is then the context trailing position ``length-1``, not S-1.
     Returns (y, new_state)."""
     k = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([state, x], axis=1)
     y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
-    new_state = xp[:, -(k - 1):] if k > 1 else state
+    if k > 1:
+        if length is None:
+            new_state = xp[:, -(k - 1):]
+        else:
+            # xp index of real token t is (k-1)+t, so the k-1 inputs trailing
+            # position length-1 live at xp[length .. length+k-2]
+            idx = length[:, None] + jnp.arange(k - 1)[None, :]
+            idx = jnp.clip(idx, 0, xp.shape[1] - 1)
+            new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+    else:
+        new_state = state
     return y.astype(x.dtype), new_state
 
 
@@ -101,8 +121,11 @@ def init_rglru_block(key, d_model: int, d_rnn: int, *, conv_width: int = 4,
 
 
 def rglru_core(params: dict, x: jax.Array, h0: jax.Array | None = None,
-               chunk: int = 512, unroll: bool = False):
-    """The RG-LRU recurrence.  x: (B,S,d_rnn) (post-conv).  Returns (y, h_T)."""
+               chunk: int = 512, unroll: bool = False,
+               seq_mask: jax.Array | None = None):
+    """The RG-LRU recurrence.  x: (B,S,d_rnn) (post-conv).  Returns (y, h_T).
+    ``seq_mask``: (B,S) bool; False positions pass the state through
+    unchanged (a=1, b=0), so h_T is the state at the last True position."""
     dt = x.dtype
     c = 8.0
     xf = x.astype(jnp.float32)
@@ -128,6 +151,10 @@ def rglru_core(params: dict, x: jax.Array, h0: jax.Array | None = None,
     a = jnp.exp(log_a)
     gated = i * xf
     b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * gated
+    if seq_mask is not None:
+        m = seq_mask[:, :, None]
+        a = jnp.where(m, a, 1.0)
+        b = jnp.where(m, b, 0.0)
     if h0 is None:
         h0 = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
     h, h_last = _chunked_linear_scan(a, b, h0, chunk, unroll)
@@ -136,16 +163,22 @@ def rglru_core(params: dict, x: jax.Array, h0: jax.Array | None = None,
 
 def rglru_block(params: dict, x: jax.Array, *, chunk: int = 512,
                 unroll: bool = False,
-                state: dict | None = None, return_state: bool = False):
-    """Full Griffin recurrent block.  x: (B,S,D) -> (B,S,D)."""
+                state: dict | None = None, return_state: bool = False,
+                length: jax.Array | None = None):
+    """Full Griffin recurrent block.  x: (B,S,D) -> (B,S,D).
+    ``length``: (B,) valid prefix lengths when x is right-padded (bucketed
+    prefill) — the returned state then reflects position length-1."""
     dt = x.dtype
     y = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["w_y"].astype(dt)),
                     approximate=True)
     u = jnp.einsum("bsd,de->bse", x, params["w_x"].astype(dt))
     conv_state = state["conv"] if state else None
     h0 = state["h"] if state else None
-    u, new_conv = causal_conv1d(u, params["conv_w"].astype(dt), conv_state)
-    h, h_last = rglru_core(params, u, h0, chunk, unroll)
+    seq_mask = None if length is None else \
+        jnp.arange(x.shape[1])[None, :] < length[:, None]
+    u, new_conv = causal_conv1d(u, params["conv_w"].astype(dt), conv_state,
+                                length=length)
+    h, h_last = rglru_core(params, u, h0, chunk, unroll, seq_mask=seq_mask)
     out = jnp.einsum("bse,ed->bsd", (h * y), params["w_out"].astype(dt))
     if return_state:
         return out, {"conv": new_conv, "h": h_last}
@@ -177,8 +210,9 @@ def init_mamba_block(key, d_model: int, d_inner: int, d_state: int = 16,
 
 def mamba_ssm(params: dict, x: jax.Array, dt_rank: int, d_state: int,
               h0: jax.Array | None = None, chunk: int = 256,
-              unroll: bool = False):
-    """Selective scan.  x: (B,S,d_inner) (post conv+silu).  Returns (y, h_T)."""
+              unroll: bool = False, seq_mask: jax.Array | None = None):
+    """Selective scan.  x: (B,S,d_inner) (post conv+silu).  Returns (y, h_T).
+    ``seq_mask``: (B,S) bool; False positions leave the state unchanged."""
     B_, S, di = x.shape
     xf = x.astype(jnp.float32)
     proj = jnp.einsum("bsd,dr->bsr", xf, params["x_proj"].astype(jnp.float32))
@@ -190,6 +224,10 @@ def mamba_ssm(params: dict, x: jax.Array, dt_rank: int, d_state: int,
     # first-order recurrence per (channel, state): h = exp(delta*a) h + delta*B*x
     alpha = jnp.exp(delta[..., None] * a[None, None])               # (B,S,di,Ns)
     beta = (delta * xf)[..., None] * b_in[:, :, None, :]            # (B,S,di,Ns)
+    if seq_mask is not None:
+        m = seq_mask[:, :, None, None]
+        alpha = jnp.where(m, alpha, 1.0)
+        beta = jnp.where(m, beta, 0.0)
     if h0 is None:
         h0 = jnp.zeros((B_, di, d_state), jnp.float32)
     h, h_last = _chunked_linear_scan(alpha, beta, h0, chunk, unroll)
@@ -201,8 +239,10 @@ def mamba_ssm(params: dict, x: jax.Array, dt_rank: int, d_state: int,
 def mamba_block(params: dict, x: jax.Array, *, d_state: int = 16,
                 dt_rank: int | None = None, chunk: int = 256,
                 unroll: bool = False,
-                state: dict | None = None, return_state: bool = False):
-    """Full Mamba-1 block.  x: (B,S,D) -> (B,S,D)."""
+                state: dict | None = None, return_state: bool = False,
+                length: jax.Array | None = None):
+    """Full Mamba-1 block.  x: (B,S,D) -> (B,S,D).
+    ``length``: (B,) valid prefix lengths when x is right-padded."""
     dt = x.dtype
     d_model = x.shape[-1]
     dt_rank = dt_rank or max(1, d_model // 16)
@@ -210,9 +250,13 @@ def mamba_block(params: dict, x: jax.Array, *, d_state: int = 16,
     xi, z = jnp.split(xz, 2, axis=-1)
     conv_state = state["conv"] if state else None
     h0 = state["h"] if state else None
-    xi, new_conv = causal_conv1d(xi, params["conv_w"].astype(dt), conv_state)
+    seq_mask = None if length is None else \
+        jnp.arange(x.shape[1])[None, :] < length[:, None]
+    xi, new_conv = causal_conv1d(xi, params["conv_w"].astype(dt), conv_state,
+                                 length=length)
     xi = jax.nn.silu(xi)
-    y, h_last = mamba_ssm(params, xi, dt_rank, d_state, h0, chunk, unroll)
+    y, h_last = mamba_ssm(params, xi, dt_rank, d_state, h0, chunk, unroll,
+                          seq_mask=seq_mask)
     out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z),
                      params["out_proj"].astype(dt))
     if return_state:

@@ -113,8 +113,11 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                 mode: str = "train",
                 state: BlockState | None = None,
                 memory: jax.Array | None = None,
+                length: jax.Array | None = None,
                 ) -> tuple[jax.Array, BlockState | None, jax.Array]:
     """One residual block. mode: train|prefill|decode.
+    ``length``: (B,) valid prefix lengths for right-padded prefill — serving
+    states then reflect position length-1, not S-1.
     Returns (x, new_state, load_balance_aux)."""
     new_state = state
     lb = jnp.zeros((), jnp.float32)
@@ -148,7 +151,7 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                                            f32_probs=cfg.attn_f32)
         if mode == "prefill" and kind in ("attn", "local", "dec"):
             kv = _fill_cache(state.kv, k, v, window=cfg.window
-                             if kind == "local" else 0)
+                             if kind == "local" else 0, length=length)
             new_state = state._replace(kv=kv)
         b, s, _, _ = out.shape
         o = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
@@ -180,7 +183,7 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
         else:
             y, rec_state = rec_lib.rglru_block(
                 p["rec"], h, chunk=min(cfg.scan_chunk, h.shape[1]),
-                state=state.rec, return_state=True)
+                state=state.rec, return_state=True, length=length)
             x = x + y
             new_state = state._replace(rec=rec_state)
         x, lb = _attn_ffn_tail(cfg, p, x)
@@ -196,7 +199,7 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                 p["ssm"], h, d_state=cfg.d_state,
                 dt_rank=cfg.dt_rank or None,
                 chunk=min(cfg.scan_chunk, h.shape[1]),
-                state=state.rec, return_state=True)
+                state=state.rec, return_state=True, length=length)
             x = x + y
             new_state = state._replace(rec=rec_state)
     else:
@@ -204,10 +207,27 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
     return x, new_state, lb
 
 
-def _fill_cache(cache: attn_lib.KVCache, k, v, window: int = 0):
-    """Write prefill K/V into the cache (left-aligned; ring for local)."""
+def _fill_cache(cache: attn_lib.KVCache, k, v, window: int = 0,
+                length: jax.Array | None = None):
+    """Write prefill K/V into the cache (left-aligned; ring for local).
+
+    ``length``: (B,) valid prefix lengths for right-padded prefill.  Entries
+    past ``length`` may hold padding garbage: they sit at cache positions that
+    decode overwrites before its validity mask ever admits them, so they are
+    never attended to."""
     b, s = k.shape[0], k.shape[1]
     smax = cache.k.shape[1]
+    if length is not None and window:
+        # ring layout: slot j must hold the last real position p < length with
+        # p % smax == j (garbage slots are masked/overwritten downstream)
+        j = jnp.arange(smax)[None, :]
+        p = (length[:, None] - 1) - ((length[:, None] - 1 - j) % smax)
+        p = jnp.clip(p, 0, s - 1)
+        ck = jnp.take_along_axis(k, p[:, :, None, None], axis=1)
+        cv = jnp.take_along_axis(v, p[:, :, None, None], axis=1)
+        return attn_lib.KVCache(ck.astype(cache.k.dtype),
+                                cv.astype(cache.v.dtype),
+                                cache.length + length)
     if window and s > smax:
         k, v = k[:, -smax:], v[:, -smax:]
         s = smax
@@ -215,7 +235,8 @@ def _fill_cache(cache: attn_lib.KVCache, k, v, window: int = 0):
                                       (0, 0, 0, 0))
     cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
                                       (0, 0, 0, 0))
-    return attn_lib.KVCache(ck, cv, cache.length + s)
+    new_len = cache.length + (s if length is None else length)
+    return attn_lib.KVCache(ck, cv, new_len)
 
 
 # ------------------------------------------------------------------- the model
@@ -405,7 +426,7 @@ class Model:
                 "tail": [one(k) for k in self.tail_kinds]}
 
     def _run_stack_serving(self, params, states, x, positions, mode,
-                           memory=None):
+                           memory=None, length=None):
         cfg = self.cfg
 
         def group_fn(x, gp_state):
@@ -414,7 +435,7 @@ class Model:
             for j, kind in enumerate(self.pattern):
                 x, ns, _ = apply_block(cfg, kind, gp[str(j)], x, positions,
                                        mode=mode, state=gstate[str(j)],
-                                       memory=memory)
+                                       memory=memory, length=length)
                 new_states[str(j)] = ns
             return x, new_states
 
@@ -441,12 +462,22 @@ class Model:
         for p_t, st, kind in zip(params["tail"], states["tail"],
                                  self.tail_kinds):
             x, ns, _ = apply_block(cfg, kind, p_t, x, positions,
-                                   mode=mode, state=st, memory=memory)
+                                   mode=mode, state=st, memory=memory,
+                                   length=length)
             new_tail.append(ns)
         return x, {"groups": new_group_states, "tail": new_tail}
 
-    def prefill(self, params, tokens, states, modality=None, src_embeds=None):
-        """Process the prompt; fill caches; return last-position logits."""
+    def prefill(self, params, tokens, states, modality=None, src_embeds=None,
+                length=None):
+        """Process the prompt; fill caches; return last-position logits.
+
+        ``length``: optional (B,) int32 valid prompt lengths for RIGHT-padded
+        ``tokens`` (the bucketed serving path: pad every prompt to a shared
+        bucket size so one compiled program serves all lengths in the bucket).
+        Causal masking keeps real positions exact under right padding; the
+        recurrent/SSM state updates freeze past ``length`` and caches record
+        ``length`` (not S), so decode continues from the true prompt end.
+        Logits are taken at position length-1 per row."""
         cfg = self.cfg
         memory = None
         if cfg.is_encdec:
@@ -454,10 +485,16 @@ class Model:
         x = self._embed_inputs(params, tokens, modality)
         positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
         x, states = self._run_stack_serving(params, states, x, positions,
-                                            "prefill", memory)
+                                            "prefill", memory, length)
         x = _norm(cfg, params["final_norm"], x)
+        if length is None:
+            x_last = x[:, -1:]
+        else:
+            idx = jnp.clip(length - 1, 0)[:, None, None]
+            x_last = jnp.take_along_axis(
+                x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1)
         table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-        logits = unembed(x[:, -1:], table)[..., :cfg.vocab_size]
+        logits = unembed(x_last, table)[..., :cfg.vocab_size]
         return logits, states, memory
 
     def decode_step(self, params, token, states, position, memory=None):

@@ -1,18 +1,28 @@
 """Batched serving engine: continuous batching over a fixed slot pool.
 
 The engine owns per-slot KV/recurrent state; requests are admitted into free
-slots, prefilled (left-padded into the shared cache), then advanced in lockstep
-decode steps.  Finished slots (EOS or max_tokens) are evicted and refilled —
-the standard continuous-batching pattern (vLLM-style), with a static slot
-count so every jitted shape is fixed.
+slots, prefilled, then advanced in lockstep decode steps.  Finished slots
+(EOS or max_tokens) are evicted and refilled — the standard continuous-
+batching pattern (vLLM-style), with a static slot count so every jitted shape
+is fixed.
+
+Prefill is *bucketed and jitted*: prompts are right-padded to a small set of
+power-of-two buckets so each bucket compiles exactly once, and the padded
+prefill + splice-into-slot runs as one compiled program (prompt length and
+target slot are traced scalars, so neither triggers recompilation).  ``step``
+interleaves work per tick — at most ``max_prefill_per_step`` admissions
+before each lockstep decode step — so a burst of arrivals no longer stalls
+every decoding slot behind a wall of prefills.
 
 Per the Mensa reading: prefill steps are compute-centric (Pascal cluster) and
 decode steps memory-centric (Jacquard/Pavlov clusters); the engine keeps them
-as separate jitted programs so each lowers with its own strategy.
+as separate jitted programs so each lowers with its own strategy — pass
+``prefill_model`` / ``decode_model`` built from per-phase
+``core.executor.execution_profile`` overrides to specialize each program.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -20,6 +30,79 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.transformer import Model
+
+
+# ------------------------------------------------------------------- buckets
+def prefill_buckets(max_len: int, min_bucket: int = 16) -> tuple[int, ...]:
+    """Power-of-two prompt buckets up to max_len: one compile per bucket.
+    When max_len is not itself a power of two, a final max_len-sized bucket
+    covers the gap so no prompt below the cache size is rejected."""
+    out = []
+    b = min_bucket
+    while b <= max_len:
+        out.append(b)
+        b *= 2
+    if not out:
+        raise ValueError(f"max_len {max_len} < min_bucket {min_bucket}")
+    if out[-1] < max_len:
+        out.append(max_len)
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket that fits an n-token prompt."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"prompt length {n} exceeds largest bucket {buckets[-1]}")
+
+
+# --------------------------------------------------------------------- stats
+@dataclass
+class EngineStats:
+    """Engine-side serving metrics, accumulated across ticks."""
+    requests_completed: int = 0
+    tokens_generated: int = 0
+    prefills: int = 0
+    prefill_prompt_tokens: int = 0
+    prefill_padded_tokens: int = 0
+    prefill_time_s: float = 0.0
+    decode_steps: int = 0
+    decode_time_s: float = 0.0
+    ttft_s: list = field(default_factory=list)
+    occupancy_sum: float = 0.0          # sum over ticks of active/slots
+    ticks: int = 0
+    bucket_counts: dict = field(default_factory=dict)
+    prefill_compiles: int = 0           # jit cache entries (== buckets seen)
+    decode_compiles: int = 0
+    wall_time_s: float = 0.0
+
+    def summary(self) -> dict:
+        ttft = sorted(self.ttft_s)
+        dec_ms = 1e3 * self.decode_time_s / max(self.decode_steps, 1)
+        return {
+            "requests_completed": self.requests_completed,
+            "tokens_generated": self.tokens_generated,
+            "tokens_per_s": self.tokens_generated / self.wall_time_s
+            if self.wall_time_s else 0.0,
+            "ttft_ms": {
+                "mean": 1e3 * float(np.mean(ttft)) if ttft else 0.0,
+                "p50": 1e3 * ttft[len(ttft) // 2] if ttft else 0.0,
+                "max": 1e3 * ttft[-1] if ttft else 0.0,
+            },
+            "decode_step_ms": dec_ms,
+            "decode_steps": self.decode_steps,
+            "prefills": self.prefills,
+            "prefill_time_s": self.prefill_time_s,
+            "prefill_padding_overhead": (
+                self.prefill_padded_tokens / self.prefill_prompt_tokens - 1.0
+                if self.prefill_prompt_tokens else 0.0),
+            "bucket_counts": dict(self.bucket_counts),
+            "slot_occupancy": self.occupancy_sum / max(self.ticks, 1),
+            "prefill_compiles": self.prefill_compiles,
+            "decode_compiles": self.decode_compiles,
+            "wall_time_s": self.wall_time_s,
+        }
 
 
 @dataclass
@@ -30,59 +113,160 @@ class Request:
     eos_id: int = -1
     generated: list[int] = field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 4,
-                 max_len: int = 512, greedy: bool = True):
+                 max_len: int = 512, greedy: bool = True,
+                 buckets: tuple[int, ...] | None = None,
+                 min_bucket: int = 16,
+                 max_prefill_per_step: int = 1,
+                 prefill_model: Model | None = None,
+                 decode_model: Model | None = None):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        if not greedy:
+            raise NotImplementedError(
+                "non-greedy sampling is not implemented yet (ROADMAP item); "
+                "both compiled paths take argmax")
         self.greedy = greedy
+        self.buckets = tuple(sorted(buckets)) if buckets \
+            else prefill_buckets(max_len, min_bucket)
+        if self.buckets[-1] > max_len:
+            raise ValueError(f"bucket {self.buckets[-1]} > max_len {max_len}")
+        self.max_prefill_per_step = max(1, max_prefill_per_step)
+        # per-phase programs (Mensa: compute-centric prefill vs memory-centric
+        # decode lower as separate jitted functions)
+        self.prefill_model = prefill_model or model
+        self.decode_model = decode_model or model
         self.states = model.init_states(slots, max_len)
         self.memory = None
         self.requests: list[Request | None] = [None] * slots
         self.positions = np.zeros(slots, np.int32)
-        self._decode = jax.jit(model.decode_step)
+        # donate the pool state: both programs update one slot (prefill) or
+        # append one token per slot (decode) — in-place instead of copying
+        # the whole pool each call
+        self._decode = jax.jit(self.decode_model.decode_step,
+                               donate_argnums=(2,))
+        self._prefill = jax.jit(self._prefill_and_splice,
+                                donate_argnums=(4,))
         self._queue: list[Request] = []
+        self.stats = EngineStats()
+
+    def reset_stats(self) -> None:
+        self.stats = EngineStats()
+        self._sync_compile_stats()
+
+    def _sync_compile_stats(self) -> None:
+        # _cache_size is a private jit attribute; degrade stats (not serving)
+        # if a JAX upgrade drops it
+        self.stats.prefill_compiles = getattr(
+            self._prefill, "_cache_size", lambda: 0)()
+        self.stats.decode_compiles = getattr(
+            self._decode, "_cache_size", lambda: 0)()
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError("empty prompt: nothing to condition on")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (prefill always "
+                             "samples the first token)")
+        if len(req.prompt) > self.max_len - 1:
+            # a max_len-token prompt fills the cache completely: the first
+            # decode write would land past the last slot and be dropped
+            raise ValueError(f"prompt length {len(req.prompt)} leaves no "
+                             f"cache room to decode (max_len {self.max_len})")
+        bucket_for(len(req.prompt), self.buckets)   # validate it fits
+        req.t_submit = time.perf_counter()
         self._queue.append(req)
 
-    def _admit(self) -> None:
+    def _admit(self, budget: int) -> int:
+        admitted = 0
         for slot in range(self.slots):
-            if self.requests[slot] is None and self._queue:
+            if admitted >= budget or not self._queue:
+                break
+            if self.requests[slot] is None:
                 req = self._queue.pop(0)
                 self.requests[slot] = req
                 self._prefill_slot(slot, req)
+                admitted += 1
+        return admitted
+
+    def _prefill_and_splice(self, params, tokens, length, slot, pool_states):
+        """One compiled program per bucket shape: padded batch-1 prefill,
+        splice into the pool at ``slot``, return the first sampled token."""
+        states1 = self.prefill_model.init_states(1, self.max_len)
+        logits, states1, _ = self.prefill_model.prefill(
+            params, tokens, states1, length=length[None])
+        pool = _splice_states(pool_states, states1, slot)
+        return jnp.argmax(logits[0, -1]), pool
 
     def _prefill_slot(self, slot: int, req: Request) -> None:
-        """Single-slot prefill: runs the prompt through a batch-1 cache and
-        splices the result into the shared slot states."""
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        states1 = self.model.init_states(1, self.max_len)
-        logits, states1, _ = self.model.prefill(self.params, toks, states1)
-        self.states = _splice_states(self.states, states1, slot)
-        self.positions[slot] = len(req.prompt)
-        tok = int(jnp.argmax(logits[0, -1]))
+        n = len(req.prompt)
+        bucket = bucket_for(n, self.buckets)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.prompt
+        t0 = time.perf_counter()
+        tok, self.states = self._prefill(
+            self.params, jnp.asarray(toks),
+            jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
+            self.states)
+        tok = int(tok)                       # blocks until the result is ready
+        now = time.perf_counter()
+        self.positions[slot] = n
         req.generated.append(tok)
+        req.t_first_token = now
+        st = self.stats
+        st.prefills += 1
+        st.prefill_prompt_tokens += n
+        st.prefill_padded_tokens += bucket
+        st.prefill_time_s += now - t0
+        st.ttft_s.append(now - req.t_submit)
+        if len(st.ttft_s) > 20_000:           # bound memory on long-lived engines
+            del st.ttft_s[:10_000]
+        st.bucket_counts[bucket] = st.bucket_counts.get(bucket, 0) + 1
+        if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
+            self._finish(slot, now)
+
+    def _finish(self, slot: int, now: float) -> None:
+        req = self.requests[slot]
+        req.done = True
+        req.t_done = now
+        self.requests[slot] = None
+        self.stats.requests_completed += 1
+        self.stats.tokens_generated += len(req.generated)
 
     # ---------------------------------------------------------------- decode
     def step(self) -> None:
-        self._admit()
+        """One engine tick: admit up to ``max_prefill_per_step`` queued
+        requests, then advance every active slot by one decode step."""
+        t_tick = time.perf_counter()
+        self._admit(self.max_prefill_per_step)
         active = [i for i, r in enumerate(self.requests) if r is not None]
+        self.stats.ticks += 1
+        self.stats.occupancy_sum += len(active) / self.slots
         if not active:
+            self._sync_compile_stats()
+            self.stats.wall_time_s += time.perf_counter() - t_tick
             return
         toks = np.zeros((self.slots, 1), np.int32)
         for i in active:
             toks[i, 0] = self.requests[i].generated[-1] \
                 if self.requests[i].generated else self.requests[i].prompt[-1]
+        t0 = time.perf_counter()
         logits, self.states = self._decode(
             self.params, jnp.asarray(toks), self.states,
             jnp.asarray(self.positions), self.memory)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        now = time.perf_counter()
+        self.stats.decode_steps += 1
+        self.stats.decode_time_s += now - t0
         for i in active:
             req = self.requests[i]
             self.positions[i] += 1
@@ -90,8 +274,11 @@ class ServeEngine:
             if (len(req.generated) >= req.max_new_tokens
                     or int(nxt[i]) == req.eos_id
                     or self.positions[i] >= self.max_len - 1):
-                req.done = True
-                self.requests[i] = None
+                self._finish(i, now)
+        self._sync_compile_stats()
+        # wall time accumulates per tick so tokens_per_s stays meaningful for
+        # callers driving submit()+step() directly instead of run()
+        self.stats.wall_time_s += time.perf_counter() - t_tick
 
     def run(self, requests: list[Request], max_steps: int = 10_000
             ) -> list[Request]:
@@ -105,10 +292,10 @@ class ServeEngine:
         return requests
 
 
-def _splice_states(pool_states, one_states, slot: int):
+def _splice_states(pool_states, one_states, slot):
     """Write batch-1 `one_states` into slot `slot` of the pooled states.
     Batch is the first axis for tail states and the second for stacked
-    (scan-group) states."""
+    (scan-group) states.  ``slot`` may be a traced scalar."""
 
     def splice(pool, new):
         if pool.ndim == new.ndim:          # tail state: batch axis 0

@@ -101,3 +101,23 @@ def parse_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
 
 def count_op(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def normalize_cost_analysis(cost) -> dict:
+    """Flatten ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns one dict; newer JAX returns a list with one dict per
+    executable program.  Returns a single flat dict, summing numeric values
+    across programs (non-numeric values keep the first occurrence)."""
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    out: dict = {}
+    for entry in cost:
+        for key, val in (entry or {}).items():
+            try:
+                out[key] = out.get(key, 0.0) + float(val)
+            except (TypeError, ValueError):
+                out.setdefault(key, val)
+    return out

@@ -146,6 +146,7 @@ def test_dryrun_entrypoint_on_tiny_mesh():
         from repro.configs import reduced_config, SHAPES
         from repro.launch import dryrun as dr
         from repro.launch import shardings as sh
+        from repro.utils.hlo import normalize_cost_analysis
         import dataclasses
 
         cfg = reduced_config("qwen3-0.6b")
@@ -155,7 +156,8 @@ def test_dryrun_entrypoint_on_tiny_mesh():
         fn, args, _, meta = dr.build_lowerable(cfg, shape, mesh)
         with mesh:
             compiled = jax.jit(fn).lower(*args).compile()
-        cost = compiled.cost_analysis()
+        # cost_analysis() is a dict on old JAX, a list of dicts on new JAX
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         assert cost.get("flops", 0) > 0
         print("OK", cost.get("flops"))
     """))

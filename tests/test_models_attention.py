@@ -1,11 +1,14 @@
 """Attention core tests: flash == reference, local == reference-with-window,
-decode path == forward path, across shapes/dtypes (hypothesis sweeps)."""
-import hypothesis.strategies as st
+decode path == forward path, across shapes/dtypes.  The randomized sweep runs
+as seeded ``pytest.mark.parametrize`` cases (formerly a hypothesis property
+test) so the suite collects offline with stdlib + jax only — see
+tests/conftest.py."""
+import random
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.models.attention import (KVCache, decode_attention, flash_attention,
                                     init_kv_cache, local_attention,
@@ -99,13 +102,13 @@ def test_decode_with_ring_window_matches_local():
     np.testing.assert_allclose(got, ref, atol=1e-5, rtol=1e-5)
 
 
-@given(
-    sq=st.integers(2, 24), h_groups=st.sampled_from([(4, 4), (4, 2), (6, 1)]),
-    hd=st.sampled_from([4, 8, 16]), block=st.sampled_from([4, 8, 32]),
-    seed=st.integers(0, 2**31 - 1))
-@settings(max_examples=25, deadline=None)
-def test_flash_property_sweep(sq, h_groups, hd, block, seed):
-    h, kvh = h_groups
+@pytest.mark.parametrize("seed", range(25))
+def test_flash_property_sweep(seed):
+    rng = random.Random(3000 + seed)
+    sq = rng.randint(2, 24)
+    h, kvh = rng.choice([(4, 4), (4, 2), (6, 1)])
+    hd = rng.choice([4, 8, 16])
+    block = rng.choice([4, 8, 32])
     key = jax.random.PRNGKey(seed)
     k1, k2, k3 = jax.random.split(key, 3)
     q = _rand(k1, 1, sq, h, hd)

@@ -1,0 +1,272 @@
+"""Bucketed continuous-batching engine tests: bucket selection, padded-prefill
+state splicing vs the unpadded batch-1 reference, slot eviction/refill, EOS,
+and the no-recompile-after-warmup guarantee (one compile per bucket)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.serve.engine import (EngineStats, Request, ServeEngine, bucket_for,
+                                prefill_buckets)
+
+
+def _tiny_model(arch="qwen3-0.6b", layers=2):
+    cfg = reduced_config(arch)
+    cfg = cfg.replace(num_layers=max(layers, len(cfg.block_pattern)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ------------------------------------------------------------------- buckets
+def test_prefill_buckets_powers_of_two():
+    assert prefill_buckets(64) == (16, 32, 64)
+    # non-power-of-two max_len gets a final gap-covering bucket
+    assert prefill_buckets(100) == (16, 32, 64, 100)
+    assert prefill_buckets(16) == (16,)
+    assert prefill_buckets(64, min_bucket=8) == (8, 16, 32, 64)
+    with pytest.raises(ValueError):
+        prefill_buckets(8, min_bucket=16)
+
+
+def test_bucket_for_selects_smallest_fitting():
+    buckets = (16, 32, 64)
+    assert bucket_for(1, buckets) == 16
+    assert bucket_for(16, buckets) == 16
+    assert bucket_for(17, buckets) == 32
+    assert bucket_for(64, buckets) == 64
+    with pytest.raises(ValueError):
+        bucket_for(65, buckets)
+
+
+def test_submit_rejects_oversized_prompt():
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=32)
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=0, prompt=list(range(40))))
+    # a max_len prompt fills the cache with no room to decode one token
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=1, prompt=list(range(32))))
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=3, prompt=[]))
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=4, prompt=[1, 2], max_new_tokens=0))
+    with pytest.raises(NotImplementedError):
+        ServeEngine(model, params, slots=1, max_len=32, greedy=False)
+    # max_len - 1 is the longest admissible prompt
+    engine.submit(Request(rid=2, prompt=list(range(31))))
+
+
+def test_non_power_of_two_max_len_accepts_prompts_near_cache_size():
+    """Regression: max_len=48 must not silently reject a 40-token prompt
+    (the bucket list gains a final 48-wide bucket)."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=1, max_len=48)
+    assert engine.buckets == (16, 32, 48)
+    (req,) = engine.run([Request(rid=0, prompt=list(range(1, 41)),
+                                 max_new_tokens=3)])
+    assert req.done and len(req.generated) == 3
+
+
+def test_gap_bucket_not_divisible_by_scan_chunk_on_recurrent_arch():
+    """Regression: a 100-wide gap bucket is not a multiple of the reduced
+    configs' scan_chunk=16 — the chunked linear scan must identity-pad the
+    tail instead of crashing, and stay exact vs the unpadded reference."""
+    _, model, params = _tiny_model("recurrentgemma-2b")
+    engine = ServeEngine(model, params, slots=1, max_len=100)
+    assert engine.buckets[-1] == 100
+    prompt = list(range(1, 71))                   # selects the 100 bucket
+    (req,) = engine.run([Request(rid=0, prompt=prompt, max_new_tokens=3)])
+    assert req.done and len(req.generated) == 3
+
+    states = model.init_states(1, 100)
+    logits, states, _ = model.prefill(
+        params, jnp.asarray([prompt], jnp.int32), states)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(2):
+        logits, states = model.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), states,
+            jnp.asarray([pos], jnp.int32), None)
+        toks.append(int(jnp.argmax(logits[0, 0])))
+        pos += 1
+    assert req.generated == toks
+
+
+# ----------------------------------------------- splice vs batch-1 reference
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "recurrentgemma-2b",
+                                  "falcon-mamba-7b"])
+def test_bucketed_prefill_matches_unpadded_reference(arch):
+    """Engine output (padded/bucketed prefill spliced into the pool) must
+    reproduce the manual unpadded batch-1 prefill + decode token-for-token —
+    covers the KV, RG-LRU, and SSM state families."""
+    _, model, params = _tiny_model(arch)
+    prompt = [5, 9, 2, 7, 11]
+    n_new = 4
+    engine = ServeEngine(model, params, slots=2, max_len=64)
+    (req,) = engine.run([Request(rid=0, prompt=prompt, max_new_tokens=n_new)])
+
+    states = model.init_states(1, 64)
+    logits, states, memory = model.prefill(
+        params, jnp.asarray([prompt], jnp.int32), states)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        logits, states = model.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), states,
+            jnp.asarray([pos], jnp.int32), memory)
+        toks.append(int(jnp.argmax(logits[0, 0])))
+        pos += 1
+    assert req.generated == toks
+
+
+def test_padded_prefill_logits_and_states_exact():
+    """Length-masked padded prefill is numerically identical to the unpadded
+    one — logits at length-1 and the post-prefill decode logits match."""
+    _, model, params = _tiny_model("recurrentgemma-2b")
+    prompt = [5, 9, 2, 7, 11]
+    L = len(prompt)
+    s_ref = model.init_states(1, 64)
+    lg_ref, s_ref, _ = model.prefill(
+        params, jnp.asarray([prompt], jnp.int32), s_ref)
+    toks = np.zeros((1, 16), np.int32)
+    toks[0, :L] = prompt
+    s_pad = model.init_states(1, 64)
+    lg_pad, s_pad, _ = model.prefill(params, jnp.asarray(toks), s_pad,
+                                     length=jnp.asarray([L], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_pad),
+                               atol=1e-6, rtol=1e-6)
+    lg1, _ = model.decode_step(params, jnp.asarray([[3]], jnp.int32), s_ref,
+                               jnp.asarray([L], jnp.int32), None)
+    lg2, _ = model.decode_step(params, jnp.asarray([[3]], jnp.int32), s_pad,
+                               jnp.asarray([L], jnp.int32), None)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ------------------------------------------------------- eviction and refill
+def test_slot_eviction_on_max_tokens_and_refill_order():
+    """More requests than slots: every request completes with exactly its
+    max_new_tokens, and slots are refilled in submission order."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=64)
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=3 + i % 2)
+            for i in range(5)]
+    done = engine.run(reqs)
+    assert all(r.done for r in done)
+    for r in done:
+        assert len(r.generated) == r.max_new_tokens
+    # admission (first-token) order == submission order
+    first_times = [r.t_first_token for r in done]
+    assert first_times == sorted(first_times)
+    assert engine.stats.requests_completed == 5
+
+
+def test_slot_eviction_on_eos():
+    """When the model emits eos_id the slot is evicted immediately."""
+    _, model, params = _tiny_model()
+    # learn what the (untrained) model generates first for this prompt
+    probe = ServeEngine(model, params, slots=1, max_len=64)
+    (r0,) = probe.run([Request(rid=0, prompt=[5, 6, 7], max_new_tokens=2)])
+    eos = r0.generated[0]
+    engine = ServeEngine(model, params, slots=1, max_len=64)
+    (r1,) = engine.run([Request(rid=1, prompt=[5, 6, 7], max_new_tokens=8,
+                                eos_id=eos)])
+    assert r1.done
+    assert r1.generated[0] == eos and len(r1.generated) == 1
+
+
+def test_interleaved_admission_budget():
+    """With max_prefill_per_step=1, a 4-request burst into 4 slots admits one
+    request per tick — decode work proceeds between admissions."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=4, max_len=64,
+                         max_prefill_per_step=1)
+    reqs = [Request(rid=i, prompt=[1 + i, 2], max_new_tokens=6)
+            for i in range(4)]
+    done = engine.run(reqs)
+    assert all(r.done for r in done)
+    # each of the 4 prefills happened on a distinct tick
+    assert engine.stats.prefills == 4
+    assert engine.stats.ticks >= 4
+    # later arrivals decoded fewer steps before earlier ones finished, but
+    # everyone still produced exactly max_new_tokens
+    assert all(len(r.generated) == 6 for r in done)
+
+
+# ------------------------------------------------------------ compile counts
+def test_no_recompiles_after_warmup():
+    """A mixed-length trace spanning 3 buckets compiles each bucket once;
+    repeating the trace (same buckets, different lengths/slots) adds zero
+    compile-cache entries."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=64)
+
+    def trace(seed):
+        rng = np.random.RandomState(seed)
+        lens = [3, 20, 40, 9, 27, 55]           # buckets 16, 32, 64
+        return [Request(rid=i, prompt=rng.randint(1, 500, n).tolist(),
+                        max_new_tokens=3)
+                for i, n in enumerate(lens)]
+
+    engine.run(trace(0))
+    warm_prefill = engine.stats.prefill_compiles
+    warm_decode = engine.stats.decode_compiles
+    assert warm_prefill == 3                     # one program per bucket
+    assert warm_decode == 1                      # one decode program
+    assert engine.stats.bucket_counts == {16: 2, 32: 2, 64: 2}
+
+    engine.reset_stats()
+    engine.run(trace(1))
+    assert engine.stats.prefill_compiles == warm_prefill
+    assert engine.stats.decode_compiles == warm_decode
+
+
+# -------------------------------------------------------------------- stats
+def test_engine_stats_summary():
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=32)
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=4)
+            for i in range(3)]
+    engine.run(reqs)
+    s = engine.stats.summary()
+    assert s["requests_completed"] == 3
+    assert s["tokens_generated"] == 12
+    assert s["tokens_per_s"] > 0
+    assert len(engine.stats.ttft_s) == 3
+    assert s["ttft_ms"]["mean"] > 0
+    assert s["decode_step_ms"] > 0
+    assert 0 < s["slot_occupancy"] <= 1
+    assert s["prefills"] == 3
+    # prompts of 3 tokens pad to the 16-bucket
+    assert s["prefill_padding_overhead"] == pytest.approx(16 / 3 - 1)
+    # ttft measured per request from submit to first token
+    for r in reqs:
+        assert r.t_first_token >= r.t_submit
+        assert r.t_done >= r.t_first_token
+
+
+def test_stats_meaningful_when_driven_via_step_api():
+    """Callers embedding the engine in their own event loop (submit + step,
+    never run) still get nonzero wall time and tokens_per_s."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=1, max_len=32)
+    engine.submit(Request(rid=0, prompt=[4, 5, 6], max_new_tokens=3))
+    for _ in range(10):
+        engine.step()
+    s = engine.stats.summary()
+    assert s["requests_completed"] == 1
+    assert s["wall_time_s"] > 0
+    assert s["tokens_per_s"] > 0
+
+
+def test_stats_reset_keeps_compile_counts():
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=1, max_len=32)
+    engine.run([Request(rid=0, prompt=[4, 5], max_new_tokens=2)])
+    n = engine.stats.prefill_compiles
+    engine.reset_stats()
+    assert engine.stats.prefill_compiles == n
+    assert engine.stats.prefills == 0 and engine.stats.ticks == 0

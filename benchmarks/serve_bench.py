@@ -1,11 +1,18 @@
 """Serving-engine benchmark: drive the bucketed continuous-batching engine
-with a synthetic mixed-length request trace and report engine metrics as JSON.
+with a synthetic mixed-length request trace — including prompts LONGER than
+the largest prefill bucket, which take the chunked path — and report engine
+metrics as JSON.
 
-Phase 1 (warmup) compiles one prefill program per bucket plus the decode
-program; phase 2 (measure) replays a fresh trace over the same buckets and
-must trigger **zero** recompiles — the acceptance gate for the bucketed
-prefill path — while reporting TTFT, decode-step latency, tokens/s, slot
-occupancy, and per-bucket padding overhead.
+Gates (all assertions, the acceptance criteria for the serving path):
+  * zero prefill/decode recompiles after ``engine.warmup()`` — the program
+    inventory (every (batch-bucket, bucket) prefill shape, the chunk
+    continuation, the decode step) is closed;
+  * batched admission: fewer compiled prefill calls than requests prefilled;
+  * chunked prefill interleaves with decode (ticks < chunks + decode steps)
+    and decode-step latency stays within a generous factor of a decode-only
+    baseline while long prompts prefill;
+  * chunked output is identical (token-for-token) to the unchunked reference
+    across the attention, RG-LRU, and Mamba state families.
 
   PYTHONPATH=src python benchmarks/serve_bench.py
   PYTHONPATH=src python benchmarks/serve_bench.py --arch recurrentgemma-2b \\
@@ -19,6 +26,8 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np
+
+VERIFY_ARCHS = ("qwen3-0.6b", "recurrentgemma-2b", "falcon-mamba-7b")
 
 
 def make_trace(n: int, vocab: int, lengths: list[int], max_new: int,
@@ -35,13 +44,53 @@ def make_trace(n: int, vocab: int, lengths: list[int], max_new: int,
     return reqs
 
 
+def verify_chunked_identity(max_new: int = 6) -> dict:
+    """Chunked vs unchunked engines must generate identical token ids for a
+    long prompt, per state family (KV cache / RG-LRU / Mamba SSM)."""
+    import jax
+    from repro.configs import reduced_config
+    from repro.models import build_model
+    from repro.serve.engine import Request, ServeEngine
+
+    out = {}
+    for arch in VERIFY_ARCHS:
+        cfg = reduced_config(arch)
+        cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = np.random.RandomState(7).randint(
+            1, cfg.vocab_size, 45).tolist()
+
+        chunked = ServeEngine(model, params, slots=2, max_len=128,
+                              buckets=(16,), prefill_chunk=16)
+        (rc,) = chunked.run([Request(rid=0, prompt=prompt,
+                                     max_new_tokens=max_new)])
+        unchunked = ServeEngine(model, params, slots=2, max_len=128)
+        (ru,) = unchunked.run([Request(rid=0, prompt=prompt,
+                                       max_new_tokens=max_new)])
+        assert chunked.stats.prefill_chunks >= 3, (
+            f"{arch}: expected a multi-chunk prefill, got "
+            f"{chunked.stats.prefill_chunks}")
+        assert rc.generated == ru.generated, (
+            f"{arch}: chunked prefill diverged from unchunked reference:\n"
+            f"  chunked:   {rc.generated}\n  unchunked: {ru.generated}")
+        out[arch] = {"tokens": rc.generated,
+                     "chunks": chunked.stats.prefill_chunks}
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--requests", type=int, default=18)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--max-bucket", type=int, default=64)
+    ap.add_argument("--max-prefill-per-step", type=int, default=4)
+    ap.add_argument("--max-prefill-batch", type=int, default=4)
+    ap.add_argument("--skip-verify", action="store_true",
+                    help="skip the 3-family chunked-identity check")
     ap.add_argument("--json", default="", help="also write the report here")
     args = ap.parse_args()
 
@@ -50,52 +99,93 @@ def main() -> None:
 
     cfg = reduced_config(args.arch)
     engine = build_engine(cfg, slots=args.slots, max_len=args.max_len,
+                          max_bucket=args.max_bucket,
+                          max_prefill_per_step=args.max_prefill_per_step,
+                          max_prefill_batch=args.max_prefill_batch,
                           plan_cfg=get_config(args.arch))
-    # lengths spanning >= 3 buckets (16 / 32 / 64 at the default min_bucket)
-    lengths = [5, 14, 20, 30, 40, 60]
-    usable = [b for b in (16, 32, 64) if b <= args.max_len]
-    assert len(usable) >= 3, (
-        f"--max-len {args.max_len} spans only prefill buckets {usable}; "
-        f"the trace needs >= 3 (use --max-len >= 64)")
+    # short lengths spanning >= 3 buckets, plus prompts long enough to need
+    # ~4 chunk-continuation calls each
+    assert len(engine.buckets) >= 3, (
+        f"buckets {engine.buckets} span < 3 sizes; raise --max-bucket/"
+        f"--max-len")
+    long_len = min(4 * engine.prefill_chunk - 3, args.max_len - 3)
+    assert long_len > engine.buckets[-1], (
+        "--max-len leaves no room for prompts beyond the largest bucket")
+    short_lengths = [5, 14, 20, 30, 40, 60]
+    mixed_lengths = short_lengths + [long_len, long_len]
 
-    warm = make_trace(max(6, args.slots), cfg.vocab_size, lengths,
-                      args.max_new, seed=0)
-    engine.run(warm)
-    warm_summary = engine.stats.summary()
+    # warmup compiles the full program inventory up front
+    engine.warmup()
+    warm = engine.stats.summary()
     # guard against a vacuous gate: if jit compile counters are unavailable
     # (private _cache_size dropped by a JAX upgrade) they read 0 everywhere
     # and 0 - 0 == 0 would "pass" even while every prefill recompiles
-    assert warm_summary["prefill_compiles"] > 0, (
+    assert warm["prefill_compiles"] > 0, (
         "compile counters unavailable — cannot certify the zero-recompile "
         "gate on this JAX version")
 
+    # decode-only baseline: short prompts, no chunking in flight
     engine.reset_stats()
-    engine.run(make_trace(args.requests, cfg.vocab_size, lengths,
+    engine.run(make_trace(max(6, args.slots), cfg.vocab_size, short_lengths,
+                          args.max_new, seed=0))
+    baseline = engine.stats.summary()
+
+    # measured phase: mixed trace with long (chunked) prompts
+    engine.reset_stats()
+    engine.run(make_trace(args.requests, cfg.vocab_size, mixed_lengths,
                           args.max_new, seed=1))
     s = engine.stats.summary()
+    ticks = engine.stats.ticks
 
-    recompiles = (s["prefill_compiles"] - warm_summary["prefill_compiles"]) \
-        + (s["decode_compiles"] - warm_summary["decode_compiles"])
+    recompiles = (s["prefill_compiles"] - warm["prefill_compiles"]) \
+        + (s["decode_compiles"] - warm["decode_compiles"])
     report = {
         "arch": args.arch,
         "slots": args.slots,
         "buckets": list(engine.buckets),
+        "prefill_chunk": engine.prefill_chunk,
+        "batch_buckets": list(engine.batch_buckets),
         "warmup": {
-            "prefill_compiles": warm_summary["prefill_compiles"],
-            "decode_compiles": warm_summary["decode_compiles"],
-            "bucket_counts": warm_summary["bucket_counts"],
+            "prefill_compiles": warm["prefill_compiles"],
+            "decode_compiles": warm["decode_compiles"],
         },
+        "baseline_decode_step_ms": baseline["decode_step_ms"],
         "measure": s,
+        "ticks": ticks,
         "recompiles_after_warmup": recompiles,
     }
+    if not args.skip_verify:
+        report["chunked_identity"] = verify_chunked_identity()
     out = json.dumps(report, indent=1)
     print(out)
     if args.json:
         p = Path(args.json)
         p.parent.mkdir(parents=True, exist_ok=True)
         p.write_text(out)
+
     assert recompiles == 0, \
         f"{recompiles} recompiles after warmup — bucketing is broken"
+    # compare against BUCKETED prefills only — chunked long prompts inflate
+    # `prefills` without adding `prefill_calls`, which would make the gate
+    # vacuous on a fully-regressed (one call per request) batching path
+    bucketed = s["prefills"] - s["prefills_chunked"]
+    assert s["prefill_calls"] < bucketed, (
+        f"batched admission had no effect: {s['prefill_calls']} compiled "
+        f"prefill calls for {bucketed} bucketed prefills")
+    assert s["prefill_chunks"] >= 4, (
+        f"long prompts did not exercise chunked prefill "
+        f"({s['prefill_chunks']} chunks)")
+    # interleaving: if chunks ran on ticks with no decode work the tick count
+    # would be >= chunks + decode steps; sharing ticks keeps it strictly below
+    assert ticks < s["prefill_chunks"] + s["decode_steps"], (
+        f"chunked prefill did not interleave with decode: {ticks} ticks for "
+        f"{s['prefill_chunks']} chunks + {s['decode_steps']} decode steps")
+    # decode-step latency while long prompts prefill stays within a generous
+    # (CI-noise-tolerant) factor of the decode-only baseline
+    assert s["decode_step_ms"] < 10 * baseline["decode_step_ms"], (
+        f"decode-step latency regressed during chunked prefill: "
+        f"{s['decode_step_ms']:.2f}ms vs baseline "
+        f"{baseline['decode_step_ms']:.2f}ms")
 
 
 if __name__ == "__main__":

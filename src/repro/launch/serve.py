@@ -1,7 +1,7 @@
 """Serving driver: per-phase Mensa plans -> engine -> batched requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \\
-      --requests 8 --slots 4
+      --requests 8 --slots 4 --max-prefill-per-step 4 --max-prefill-batch 4
 """
 from __future__ import annotations
 
@@ -14,32 +14,42 @@ import numpy as np
 from ..configs import get_config, reduced_config
 from ..core.executor import phase_profiles
 from ..models import build_model
-from ..serve.engine import Request, ServeEngine
+from ..serve.engine import Request, ServeEngine, prefill_buckets
 
 
 def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
-                 min_bucket: int = 16, max_prefill_per_step: int = 1,
+                 min_bucket: int = 16, max_bucket: int | None = None,
+                 max_prefill_per_step: int = 1, max_prefill_batch: int = 4,
+                 prefill_chunk: int | None = None,
                  plan_cfg=None, profiles=None) -> ServeEngine:
     """Engine with the prefill/decode programs routed through their
     Mensa execution profiles (runtime-safe overrides only — the phase models
     share one parameter tree).  With today's cost model the serve-shape
     profiles often carry no runtime-safe overrides; the routing is the hook
     that picks them up as soon as measurement adds them.  Pass ``profiles``
-    (a (prefill, decode) pair) to reuse already-computed plans."""
+    (a (prefill, decode) pair) to reuse already-computed plans.
+    ``max_bucket`` caps the prefill buckets below max_len so longer prompts
+    exercise the chunked path."""
     prefill_prof, decode_prof = profiles or phase_profiles(plan_cfg or cfg)
     model = build_model(cfg)
     if params is None:
         params = model.init(jax.random.PRNGKey(0))
     prefill_cfg = prefill_prof.apply(cfg, runtime_only=True)
     decode_cfg = decode_prof.apply(cfg, runtime_only=True)
+    buckets = None
+    if max_bucket is not None:
+        buckets = prefill_buckets(min(max_bucket, max_len), min_bucket)
     return ServeEngine(
         model, params, slots=slots, max_len=max_len, min_bucket=min_bucket,
+        buckets=buckets,
         max_prefill_per_step=max_prefill_per_step,
+        max_prefill_batch=max_prefill_batch,
+        prefill_chunk=prefill_chunk,
         prefill_model=build_model(prefill_cfg) if prefill_cfg != cfg else None,
         decode_model=build_model(decode_cfg) if decode_cfg != cfg else None)
 
 
-def main() -> None:
+def parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true")
@@ -48,7 +58,27 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--min-bucket", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--max-bucket", type=int, default=None,
+                    help="cap prefill buckets below max-len; longer prompts "
+                         "run the chunked path")
+    ap.add_argument("--max-prefill-per-step", type=int, default=1,
+                    help="admissions per engine tick")
+    ap.add_argument("--max-prefill-batch", type=int, default=4,
+                    help="same-bucket admissions stacked into one compiled "
+                         "prefill call")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunk width for prompts longer than the largest "
+                         "bucket (default: the largest bucket)")
+    ap.add_argument("--long-prompts", type=int, default=0,
+                    help="also submit this many prompts longer than the "
+                         "largest bucket (chunked prefill)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile every engine program before serving")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> None:
+    args = parse_args(argv)
 
     plan_cfg = get_config(args.arch)
     prefill_prof, decode_prof = phase_profiles(plan_cfg)
@@ -62,12 +92,32 @@ def main() -> None:
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     engine = build_engine(cfg, slots=args.slots, max_len=args.max_len,
                           min_bucket=args.min_bucket,
+                          max_bucket=args.max_bucket,
+                          max_prefill_per_step=args.max_prefill_per_step,
+                          max_prefill_batch=args.max_prefill_batch,
+                          prefill_chunk=args.prefill_chunk,
                           profiles=(prefill_prof, decode_prof))
+    if args.warmup:
+        engine.warmup()
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i,
                     prompt=rng.randint(1, cfg.vocab_size, 4 + i % 6).tolist(),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
+    if args.long_prompts:
+        long_len = min(engine.buckets[-1] + engine.prefill_chunk,
+                       args.max_len - 1)
+        if long_len <= engine.buckets[-1]:
+            raise SystemExit(
+                f"--long-prompts needs prompts longer than the largest "
+                f"bucket ({engine.buckets[-1]}), but max_len {args.max_len} "
+                f"leaves no admissible length above it — pass --max-bucket "
+                f"below max_len (e.g. --max-bucket {args.max_len // 4})")
+        reqs += [Request(rid=args.requests + i,
+                         prompt=rng.randint(1, cfg.vocab_size,
+                                            long_len).tolist(),
+                         max_new_tokens=args.max_new)
+                 for i in range(args.long_prompts)]
     engine.run(reqs)
     print(json.dumps(engine.stats.summary(), indent=1))
 

@@ -195,12 +195,16 @@ def init_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
 
 
 def decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
-                     cache: KVCache, *, window: int = 0
+                     cache: KVCache, *, window: int = 0,
+                     write_mask: jax.Array | None = None
                      ) -> tuple[jax.Array, KVCache]:
     """One-token attention against the cache.
 
     q/new_k/new_v: (B,1,H|KVH,hd).  Appends the new KV at position length[b]
     and attends to all cached positions (optionally only the last `window`).
+    ``write_mask``: optional (B,) bool — False rows leave the cache (contents
+    and length) untouched, so a batching engine can tick dead or mid-prefill
+    slots without corrupting them; their outputs are garbage.
     """
     b, one, h, hd = q.shape
     _, _, kvh, _ = new_k.shape
@@ -212,6 +216,8 @@ def decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
         # ring-buffer the window: write at position length % window
         idx = cache.length % jnp.int32(cache.k.shape[1])
     onehot = jax.nn.one_hot(idx, smax, dtype=cache.k.dtype)      # (B,Smax)
+    if write_mask is not None:
+        onehot = onehot * write_mask.astype(cache.k.dtype)[:, None]
     oh = onehot[:, :, None, None]
     k = cache.k * (1 - oh) + oh * new_k.astype(cache.k.dtype)    # replace slot
     v = cache.v * (1 - oh) + oh * new_v.astype(cache.v.dtype)
@@ -226,7 +232,93 @@ def decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bnGk,bknd->bnGd", p, v.astype(jnp.float32))
     out = out.reshape(b, 1, h, hd).astype(q.dtype)
-    return out, KVCache(k=k, v=v, length=cache.length + 1)
+    inc = 1 if write_mask is None else write_mask.astype(jnp.int32)
+    return out, KVCache(k=k, v=v, length=cache.length + inc)
+
+
+# ---------------------------------------------------- chunked prefill (resume)
+def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, cache: KVCache,
+                    *, offset: jax.Array, length: jax.Array, window: int = 0
+                    ) -> tuple[jax.Array, KVCache]:
+    """Attention for one prefill chunk resuming from a cache at ``offset``.
+
+    q/k/v: (B,C,H|KVH,hd) projected at absolute positions ``offset + i``;
+    ``length``: (B,) valid (non-padding) tokens in this right-padded chunk;
+    ``offset``: (B,) tokens already cached (the ``q_offset`` of row 0).  The
+    chunk's real K/V are written into the cache — left-aligned at ``offset``
+    for full attention, ring slots for sliding-window — and every real q row
+    attends to its full causal (and window) horizon, exactly as if the whole
+    prompt had been prefilled in one call.  Rows past ``length`` produce
+    garbage outputs that callers mask downstream.  Returns
+    (out (B,C,H,hd), cache with length = offset + length).
+
+    One compiled program serves every chunk of every prompt: offset/length
+    are traced, the chunk width C is the only shape.
+    """
+    b, c, h, hd = q.shape
+    _, _, kvh, _ = k.shape
+    g = h // kvh
+    smax = cache.k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = offset[:, None] + jnp.arange(c)[None, :]            # (B,C)
+    qg = (q.reshape(b, c, kvh, g, hd) * scale).astype(jnp.float32)
+    new_len = offset + length
+
+    def gather_chunk(src, arr, dtype):
+        i = jnp.clip(src, 0, c - 1)
+        return jnp.take_along_axis(arr.astype(dtype), i[:, :, None, None],
+                                   axis=1)
+
+    if not window:
+        # write chunk rows < length at cache positions offset..offset+length-1
+        # (stale entries past new_len stay, masked until overwritten — the
+        # same invariant _fill_cache documents)
+        j = jnp.arange(smax)[None, :]                           # (1,Smax)
+        src = j - offset[:, None]                               # (B,Smax)
+        in_chunk = (src >= 0) & (src < length[:, None])
+        m4 = in_chunk[:, :, None, None]
+        ck = jnp.where(m4, gather_chunk(src, k, cache.k.dtype), cache.k)
+        cv = jnp.where(m4, gather_chunk(src, v, cache.v.dtype), cache.v)
+        s = jnp.einsum("bqnGd,bknd->bnGqk", qg,
+                       ck.astype(jnp.float32))                  # (B,KVH,G,C,Smax)
+        mask = j[:, None, :] <= q_pos[:, :, None]               # (B,C,Smax)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bnGqk,bknd->bnGqd", p, cv.astype(jnp.float32))
+        out = jnp.moveaxis(out, 3, 1).reshape(b, c, h, hd)
+        return out.astype(q.dtype), KVCache(ck, cv, new_len)
+
+    # sliding window over a ring of W slots: attend over (prior ring ++ chunk)
+    # BEFORE writing, because the chunk overwrites ring slots whose old
+    # occupants are still inside early q rows' windows
+    W = smax
+    jw = jnp.arange(W)[None, :]                                  # (1,W)
+    # ring slot j holds the last position p < offset with p % W == j
+    p_prior = (offset[:, None] - 1) - ((offset[:, None] - 1 - jw) % W)
+    chunk_valid = jnp.arange(c)[None, :] < length[:, None]       # (B,C)
+    kv_pos = jnp.concatenate([p_prior, q_pos], axis=1)           # (B,W+C)
+    kv_valid = jnp.concatenate([p_prior >= 0, chunk_valid], axis=1)
+    kk = jnp.concatenate([cache.k.astype(jnp.float32),
+                          k.astype(jnp.float32)], axis=1)
+    vv = jnp.concatenate([cache.v.astype(jnp.float32),
+                          v.astype(jnp.float32)], axis=1)
+    s = jnp.einsum("bqnGd,bknd->bnGqk", qg, kk)                  # (B,KVH,G,C,W+C)
+    mask = (kv_valid[:, None, :]
+            & (kv_pos[:, None, :] <= q_pos[:, :, None])
+            & (kv_pos[:, None, :] > q_pos[:, :, None] - window))
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnGqk,bknd->bnGqd", p, vv)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, c, h, hd)
+    # ring write: slot j's new occupant is the last real position < new_len
+    # congruent to j — from the chunk if >= offset, else keep the old entry
+    last = new_len[:, None] - 1
+    p_new = last - ((last - jw) % W)
+    src = p_new - offset[:, None]
+    m4 = (src >= 0)[:, :, None, None]
+    ck = jnp.where(m4, gather_chunk(src, k, cache.k.dtype), cache.k)
+    cv = jnp.where(m4, gather_chunk(src, v, cache.v.dtype), cache.v)
+    return out.astype(q.dtype), KVCache(ck, cv, new_len)
 
 
 # ------------------------------------------------------------------- reference

@@ -114,10 +114,16 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                 state: BlockState | None = None,
                 memory: jax.Array | None = None,
                 length: jax.Array | None = None,
+                offset: jax.Array | None = None,
                 ) -> tuple[jax.Array, BlockState | None, jax.Array]:
     """One residual block. mode: train|prefill|decode.
     ``length``: (B,) valid prefix lengths for right-padded prefill — serving
-    states then reflect position length-1, not S-1.
+    states then reflect position length-1, not S-1.  In decode mode a 0/1
+    ``length`` acts as an activity mask: rows with length 0 leave all state
+    (KV append, conv context, recurrent h) unchanged.
+    ``offset``: (B,) tokens already consumed when this prefill call resumes a
+    chunked prompt — attention continues against the cache, recurrences
+    continue from the carried state (zeroed where offset == 0).
     Returns (x, new_state, load_balance_aux)."""
     new_state = state
     lb = jnp.zeros((), jnp.float32)
@@ -129,6 +135,15 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
         if mode == "decode":
             out, kv = attn_lib.decode_attention(
                 q, k, v, state.kv,
+                window=cfg.window if kind == "local" else 0,
+                write_mask=None if length is None else length > 0)
+            new_state = state._replace(kv=kv)
+        elif mode == "prefill" and offset is not None:
+            if kind not in ("attn", "local"):
+                raise NotImplementedError(
+                    "chunked prefill supports decoder-only self-attention")
+            out, kv = attn_lib.chunk_attention(
+                q, k, v, state.kv, offset=offset, length=length,
                 window=cfg.window if kind == "local" else 0)
             new_state = state._replace(kv=kv)
         elif kind == "local":
@@ -149,7 +164,8 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                                            block_kv=cfg.attn_block_kv,
                                            unroll=cfg.unroll_scans,
                                            f32_probs=cfg.attn_f32)
-        if mode == "prefill" and kind in ("attn", "local", "dec"):
+        if mode == "prefill" and offset is None \
+                and kind in ("attn", "local", "dec"):
             kv = _fill_cache(state.kv, k, v, window=cfg.window
                              if kind == "local" else 0, length=length)
             new_state = state._replace(kv=kv)
@@ -183,7 +199,8 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
         else:
             y, rec_state = rec_lib.rglru_block(
                 p["rec"], h, chunk=min(cfg.scan_chunk, h.shape[1]),
-                state=state.rec, return_state=True, length=length)
+                state=_resume_rec(state.rec, offset), return_state=True,
+                length=length)
             x = x + y
             new_state = state._replace(rec=rec_state)
         x, lb = _attn_ffn_tail(cfg, p, x)
@@ -199,12 +216,25 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                 p["ssm"], h, d_state=cfg.d_state,
                 dt_rank=cfg.dt_rank or None,
                 chunk=min(cfg.scan_chunk, h.shape[1]),
-                state=state.rec, return_state=True, length=length)
+                state=_resume_rec(state.rec, offset), return_state=True,
+                length=length)
             x = x + y
             new_state = state._replace(rec=rec_state)
     else:
         raise ValueError(kind)
     return x, new_state, lb
+
+
+def _resume_rec(rec: dict | None, offset: jax.Array | None) -> dict | None:
+    """Carried conv/recurrent state for a (possibly resumed) prefill chunk.
+    A slot being prefilled from scratch (offset == 0) may hold a previous
+    request's residue — zero it per row; offset > 0 rows continue theirs."""
+    if rec is None or offset is None:
+        return rec
+    live = offset > 0
+    return {k: jnp.where(live.reshape((-1,) + (1,) * (a.ndim - 1)),
+                         a, jnp.zeros_like(a))
+            for k, a in rec.items()}
 
 
 def _fill_cache(cache: attn_lib.KVCache, k, v, window: int = 0,
@@ -426,7 +456,7 @@ class Model:
                 "tail": [one(k) for k in self.tail_kinds]}
 
     def _run_stack_serving(self, params, states, x, positions, mode,
-                           memory=None, length=None):
+                           memory=None, length=None, offset=None):
         cfg = self.cfg
 
         def group_fn(x, gp_state):
@@ -435,7 +465,8 @@ class Model:
             for j, kind in enumerate(self.pattern):
                 x, ns, _ = apply_block(cfg, kind, gp[str(j)], x, positions,
                                        mode=mode, state=gstate[str(j)],
-                                       memory=memory, length=length)
+                                       memory=memory, length=length,
+                                       offset=offset)
                 new_states[str(j)] = ns
             return x, new_states
 
@@ -463,12 +494,12 @@ class Model:
                                  self.tail_kinds):
             x, ns, _ = apply_block(cfg, kind, p_t, x, positions,
                                    mode=mode, state=st, memory=memory,
-                                   length=length)
+                                   length=length, offset=offset)
             new_tail.append(ns)
         return x, {"groups": new_group_states, "tail": new_tail}
 
     def prefill(self, params, tokens, states, modality=None, src_embeds=None,
-                length=None):
+                length=None, offset=None):
         """Process the prompt; fill caches; return last-position logits.
 
         ``length``: optional (B,) int32 valid prompt lengths for RIGHT-padded
@@ -477,15 +508,31 @@ class Model:
         Causal masking keeps real positions exact under right padding; the
         recurrent/SSM state updates freeze past ``length`` and caches record
         ``length`` (not S), so decode continues from the true prompt end.
-        Logits are taken at position length-1 per row."""
+        Logits are taken at position length-1 per row.
+
+        ``offset``: optional (B,) int32 — ``tokens`` is one CHUNK of a longer
+        prompt whose first ``offset`` tokens already live in ``states``
+        (vLLM-style chunked prefill).  Attention resumes against the cache,
+        recurrent/conv state continues from the carry (zeroed per row where
+        offset == 0, so a recycled slot starts clean), and logits land at
+        chunk position length-1.  Requires ``length``; decoder-only token
+        models only."""
         cfg = self.cfg
         memory = None
+        if offset is not None:
+            if length is None:
+                raise ValueError("chunked prefill (offset=...) needs length")
+            if cfg.is_encdec or cfg.modality_tokens:
+                raise NotImplementedError(
+                    "chunked prefill supports decoder-only token models")
         if cfg.is_encdec:
             memory = self._encode(params, src_embeds)
         x = self._embed_inputs(params, tokens, modality)
-        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+        base = jnp.arange(x.shape[1])[None]
+        positions = jnp.broadcast_to(base, x.shape[:2]) if offset is None \
+            else offset[:, None] + base
         x, states = self._run_stack_serving(params, states, x, positions,
-                                            "prefill", memory, length)
+                                            "prefill", memory, length, offset)
         x = _norm(cfg, params["final_norm"], x)
         if length is None:
             x_last = x[:, -1:]
@@ -497,13 +544,21 @@ class Model:
         logits = unembed(x_last, table)[..., :cfg.vocab_size]
         return logits, states, memory
 
-    def decode_step(self, params, token, states, position, memory=None):
-        """token: (B,1) -> logits (B,1,V), updated states."""
+    def decode_step(self, params, token, states, position, memory=None,
+                    active=None):
+        """token: (B,1) -> logits (B,1,V), updated states.
+
+        ``active``: optional (B,) bool — False rows leave every piece of
+        per-slot state (KV append + cache length, conv context, recurrent h)
+        bit-for-bit unchanged and produce garbage logits, so an engine can
+        tick a pool containing dead or mid-prefill slots without corrupting
+        them.  Active rows are bitwise identical to active=None."""
         cfg = self.cfg
         x = self._embed_inputs(params, token)
         positions = jnp.broadcast_to(position[:, None], token.shape)
+        length = None if active is None else active.astype(jnp.int32)
         x, states = self._run_stack_serving(params, states, x, positions,
-                                            "decode", memory)
+                                            "decode", memory, length)
         x = _norm(cfg, params["final_norm"], x)
         table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
         logits = unembed(x, table)[..., :cfg.vocab_size]

@@ -6,13 +6,23 @@ slots, prefilled, then advanced in lockstep decode steps.  Finished slots
 batching pattern (vLLM-style), with a static slot count so every jitted shape
 is fixed.
 
-Prefill is *bucketed and jitted*: prompts are right-padded to a small set of
-power-of-two buckets so each bucket compiles exactly once, and the padded
-prefill + splice-into-slot runs as one compiled program (prompt length and
-target slot are traced scalars, so neither triggers recompilation).  ``step``
-interleaves work per tick — at most ``max_prefill_per_step`` admissions
-before each lockstep decode step — so a burst of arrivals no longer stalls
-every decoding slot behind a wall of prefills.
+Prefill is *bucketed, batched, and jitted*: prompts are right-padded to a
+small set of power-of-two buckets, same-bucket admissions in one tick are
+stacked into one ``(N, bucket)`` prefill program (N itself bucketed to powers
+of two up to ``max_prefill_batch``), and the padded prefill + splice-into-
+slots runs as one compiled call — lengths and target slots are traced, so the
+program inventory is exactly |buckets| x |batch buckets|.
+
+Prompts longer than the largest bucket take the *chunked* path: the prompt is
+split into ``prefill_chunk``-wide pieces that run one per tick, interleaved
+with decode steps, each resuming from the slot's spliced state (cache
+continuation for causal/sliding-window attention, conv + RG-LRU/SSM carry for
+the recurrent families).  Decode latency for already-running slots therefore
+stays bounded by one chunk, not one full long prompt.
+
+``step`` interleaves work per tick — in-flight chunks advance, then at most
+``max_prefill_per_step`` admissions, then one lockstep decode step whose
+``active`` mask freezes dead and mid-prefill slots bit-for-bit.
 
 Per the Mensa reading: prefill steps are compute-centric (Pascal cluster) and
 decode steps memory-centric (Jacquard/Pavlov clusters); the engine keeps them
@@ -23,6 +33,8 @@ as separate jitted programs so each lowers with its own strategy — pass
 from __future__ import annotations
 
 import time
+import warnings
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -30,6 +42,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.transformer import Model
+
+# TTFT samples kept for windowed percentiles (mean/max stay exact streaming)
+TTFT_WINDOW = 8192
 
 
 # ------------------------------------------------------------------- buckets
@@ -62,42 +77,68 @@ def bucket_for(n: int, buckets: tuple[int, ...]) -> int:
 class EngineStats:
     """Engine-side serving metrics, accumulated across ticks."""
     requests_completed: int = 0
+    requests_aborted: int = 0           # unfinished when run() hit max_steps
     tokens_generated: int = 0
-    prefills: int = 0
+    prefills: int = 0                   # requests prefilled (all paths)
+    prefills_chunked: int = 0           # requests prefilled via the chunked path
+    prefill_calls: int = 0              # compiled batched-prefill invocations
+    prefill_chunks: int = 0             # chunk-continuation invocations
     prefill_prompt_tokens: int = 0
     prefill_padded_tokens: int = 0
     prefill_time_s: float = 0.0
     decode_steps: int = 0
     decode_time_s: float = 0.0
+    # TTFT: count/sum/max are exact streaming aggregates; ttft_s keeps only
+    # the most recent TTFT_WINDOW..2*TTFT_WINDOW samples so percentiles are
+    # *windowed* (recent-traffic) on long-lived engines, never silently biased
     ttft_s: list = field(default_factory=list)
-    occupancy_sum: float = 0.0          # sum over ticks of active/slots
+    ttft_count: int = 0
+    ttft_sum: float = 0.0
+    ttft_max: float = 0.0
+    occupancy_sum: float = 0.0          # sum over ticks of busy/slots
     ticks: int = 0
     bucket_counts: dict = field(default_factory=dict)
-    prefill_compiles: int = 0           # jit cache entries (== buckets seen)
+    batch_counts: dict = field(default_factory=dict)   # rows per prefill call
+    prefill_compiles: int = 0           # jit cache entries (incl. chunk prog)
     decode_compiles: int = 0
     wall_time_s: float = 0.0
 
+    def record_ttft(self, v: float) -> None:
+        self.ttft_count += 1
+        self.ttft_sum += v
+        if v > self.ttft_max:
+            self.ttft_max = v
+        self.ttft_s.append(v)
+        if len(self.ttft_s) >= 2 * TTFT_WINDOW:        # amortized O(1) trim
+            del self.ttft_s[:len(self.ttft_s) - TTFT_WINDOW]
+
     def summary(self) -> dict:
-        ttft = sorted(self.ttft_s)
         dec_ms = 1e3 * self.decode_time_s / max(self.decode_steps, 1)
         return {
             "requests_completed": self.requests_completed,
+            "requests_aborted": self.requests_aborted,
             "tokens_generated": self.tokens_generated,
             "tokens_per_s": self.tokens_generated / self.wall_time_s
             if self.wall_time_s else 0.0,
             "ttft_ms": {
-                "mean": 1e3 * float(np.mean(ttft)) if ttft else 0.0,
-                "p50": 1e3 * ttft[len(ttft) // 2] if ttft else 0.0,
-                "max": 1e3 * ttft[-1] if ttft else 0.0,
+                "mean": 1e3 * self.ttft_sum / self.ttft_count
+                if self.ttft_count else 0.0,           # exact
+                "p50": 1e3 * float(np.median(self.ttft_s))
+                if self.ttft_s else 0.0,               # windowed
+                "max": 1e3 * self.ttft_max,            # exact
             },
             "decode_step_ms": dec_ms,
             "decode_steps": self.decode_steps,
             "prefills": self.prefills,
+            "prefills_chunked": self.prefills_chunked,
+            "prefill_calls": self.prefill_calls,
+            "prefill_chunks": self.prefill_chunks,
             "prefill_time_s": self.prefill_time_s,
             "prefill_padding_overhead": (
                 self.prefill_padded_tokens / self.prefill_prompt_tokens - 1.0
                 if self.prefill_prompt_tokens else 0.0),
             "bucket_counts": dict(self.bucket_counts),
+            "prefill_batch_counts": dict(self.batch_counts),
             "slot_occupancy": self.occupancy_sum / max(self.ticks, 1),
             "prefill_compiles": self.prefill_compiles,
             "decode_compiles": self.decode_compiles,
@@ -113,6 +154,7 @@ class Request:
     eos_id: int = -1
     generated: list[int] = field(default_factory=list)
     done: bool = False
+    aborted: bool = False               # unfinished when run() gave up
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
@@ -124,6 +166,8 @@ class ServeEngine:
                  buckets: tuple[int, ...] | None = None,
                  min_bucket: int = 16,
                  max_prefill_per_step: int = 1,
+                 max_prefill_batch: int = 4,
+                 prefill_chunk: int | None = None,
                  prefill_model: Model | None = None,
                  decode_model: Model | None = None):
         self.model = model
@@ -140,6 +184,16 @@ class ServeEngine:
         if self.buckets[-1] > max_len:
             raise ValueError(f"bucket {self.buckets[-1]} > max_len {max_len}")
         self.max_prefill_per_step = max(1, max_prefill_per_step)
+        # batch-bucket the admission group size so the compiled-program
+        # inventory stays |buckets| x |batch_buckets|, not one per group size
+        self.max_prefill_batch = max(1, min(max_prefill_batch, slots))
+        self.batch_buckets = prefill_buckets(self.max_prefill_batch,
+                                             min_bucket=1)
+        self.prefill_chunk = int(prefill_chunk) if prefill_chunk \
+            else self.buckets[-1]
+        if not 1 <= self.prefill_chunk <= max_len:
+            raise ValueError(f"prefill_chunk {self.prefill_chunk} outside "
+                             f"[1, max_len {max_len}]")
         # per-phase programs (Mensa: compute-centric prefill vs memory-centric
         # decode lower as separate jitted functions)
         self.prefill_model = prefill_model or model
@@ -148,14 +202,15 @@ class ServeEngine:
         self.memory = None
         self.requests: list[Request | None] = [None] * slots
         self.positions = np.zeros(slots, np.int32)
-        # donate the pool state: both programs update one slot (prefill) or
-        # append one token per slot (decode) — in-place instead of copying
-        # the whole pool each call
+        # donate the pool state: every program updates slots in place instead
+        # of copying the whole pool each call
         self._decode = jax.jit(self.decode_model.decode_step,
                                donate_argnums=(2,))
         self._prefill = jax.jit(self._prefill_and_splice,
                                 donate_argnums=(4,))
-        self._queue: list[Request] = []
+        self._chunk = jax.jit(self._chunk_and_splice, donate_argnums=(5,))
+        self._queue: deque[Request] = deque()
+        self._prefilling: dict[int, int] = {}   # slot -> prompt tokens consumed
         self.stats = EngineStats()
 
     def reset_stats(self) -> None:
@@ -165,10 +220,10 @@ class ServeEngine:
     def _sync_compile_stats(self) -> None:
         # _cache_size is a private jit attribute; degrade stats (not serving)
         # if a JAX upgrade drops it
-        self.stats.prefill_compiles = getattr(
-            self._prefill, "_cache_size", lambda: 0)()
-        self.stats.decode_compiles = getattr(
-            self._decode, "_cache_size", lambda: 0)()
+        def size(fn):
+            return getattr(fn, "_cache_size", lambda: 0)()
+        self.stats.prefill_compiles = size(self._prefill) + size(self._chunk)
+        self.stats.decode_compiles = size(self._decode)
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
@@ -182,87 +237,197 @@ class ServeEngine:
             # decode write would land past the last slot and be dropped
             raise ValueError(f"prompt length {len(req.prompt)} leaves no "
                              f"cache room to decode (max_len {self.max_len})")
-        bucket_for(len(req.prompt), self.buckets)   # validate it fits
         req.t_submit = time.perf_counter()
         self._queue.append(req)
 
     def _admit(self, budget: int) -> int:
-        admitted = 0
-        for slot in range(self.slots):
-            if admitted >= budget or not self._queue:
-                break
-            if self.requests[slot] is None:
-                req = self._queue.pop(0)
-                self.requests[slot] = req
-                self._prefill_slot(slot, req)
-                admitted += 1
-        return admitted
+        free = [s for s in range(self.slots) if self.requests[s] is None]
+        take = min(budget, len(free), len(self._queue))
+        if take <= 0:
+            return 0
+        groups: dict[int, list[tuple[int, Request]]] = {}
+        for _ in range(take):
+            req = self._queue.popleft()
+            slot = free.pop(0)
+            self.requests[slot] = req
+            if len(req.prompt) > self.buckets[-1]:
+                # long prompt: chunked path — first chunk runs this tick,
+                # the rest advance one per tick interleaved with decode
+                self._prefilling[slot] = 0
+                self._advance_chunk(slot)
+            else:
+                b = bucket_for(len(req.prompt), self.buckets)
+                groups.setdefault(b, []).append((slot, req))
+        for b in sorted(groups):
+            members = groups[b]
+            for i in range(0, len(members), self.max_prefill_batch):
+                self._prefill_group(b, members[i:i + self.max_prefill_batch])
+        return take
 
-    def _prefill_and_splice(self, params, tokens, length, slot, pool_states):
-        """One compiled program per bucket shape: padded batch-1 prefill,
-        splice into the pool at ``slot``, return the first sampled token."""
-        states1 = self.prefill_model.init_states(1, self.max_len)
-        logits, states1, _ = self.prefill_model.prefill(
-            params, tokens, states1, length=length[None])
-        pool = _splice_states(pool_states, states1, slot)
+    def _prefill_and_splice(self, params, tokens, lengths, slot_ids,
+                            pool_states):
+        """One compiled program per (batch-bucket, bucket) shape: padded
+        (N, bucket) prefill, splice each row into the pool at ``slot_ids[i]``,
+        return the N first sampled tokens.  Padding rows (group smaller than
+        the batch bucket) carry slot_ids[0]; rows splice in REVERSE order so
+        the real row that shares a padding row's target lands last and wins."""
+        n = tokens.shape[0]
+        states_n = self.prefill_model.init_states(n, self.max_len)
+        logits, states_n, _ = self.prefill_model.prefill(
+            params, tokens, states_n, length=lengths)
+        for i in reversed(range(n)):
+            row = _state_row(states_n, i)
+            pool_states = _splice_states(pool_states, row, slot_ids[i])
+        return jnp.argmax(logits[:, 0], axis=-1), pool_states
+
+    def _chunk_and_splice(self, params, tokens, offset, length, slot,
+                          pool_states):
+        """One compiled program for every chunk of every long prompt: gather
+        the slot's state, resume prefill at ``offset`` with the (1, C) chunk,
+        splice back, return the sampled token (meaningful on the final chunk
+        only)."""
+        row = _gather_slot(pool_states, slot)
+        logits, row, _ = self.prefill_model.prefill(
+            params, tokens, row, length=length[None], offset=offset[None])
+        pool = _splice_states(pool_states, row, slot)
         return jnp.argmax(logits[0, -1]), pool
 
-    def _prefill_slot(self, slot: int, req: Request) -> None:
-        n = len(req.prompt)
-        bucket = bucket_for(n, self.buckets)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :n] = req.prompt
+    def _prefill_group(self, bucket: int, members: list) -> None:
+        n = len(members)
+        nb = bucket_for(n, self.batch_buckets)
+        toks = np.zeros((nb, bucket), np.int32)
+        lens = np.ones((nb,), np.int32)
+        slot_ids = np.full((nb,), members[0][0], np.int32)
+        for i, (slot, req) in enumerate(members):
+            toks[i, :len(req.prompt)] = req.prompt
+            lens[i] = len(req.prompt)
+            slot_ids[i] = slot
         t0 = time.perf_counter()
-        tok, self.states = self._prefill(
-            self.params, jnp.asarray(toks),
+        first, self.states = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(slot_ids), self.states)
+        first = np.asarray(first)            # blocks until the result is ready
+        now = time.perf_counter()
+        st = self.stats
+        st.prefill_calls += 1
+        st.prefill_time_s += now - t0
+        st.batch_counts[n] = st.batch_counts.get(n, 0) + 1
+        for i, (slot, req) in enumerate(members):
+            tok = int(first[i])
+            self.positions[slot] = len(req.prompt)
+            req.generated.append(tok)
+            req.t_first_token = now
+            st.prefills += 1
+            st.prefill_prompt_tokens += len(req.prompt)
+            st.prefill_padded_tokens += bucket
+            st.record_ttft(now - req.t_submit)
+            st.bucket_counts[bucket] = st.bucket_counts.get(bucket, 0) + 1
+            if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
+                self._finish(slot, now)
+
+    def _advance_chunk(self, slot: int) -> None:
+        req = self.requests[slot]
+        off = self._prefilling[slot]
+        c = self.prefill_chunk
+        piece = req.prompt[off:off + c]
+        n = len(piece)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :n] = piece
+        t0 = time.perf_counter()
+        tok, self.states = self._chunk(
+            self.params, jnp.asarray(toks), jnp.asarray(off, jnp.int32),
             jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
             self.states)
-        tok = int(tok)                       # blocks until the result is ready
+        st = self.stats
+        st.prefill_chunks += 1
+        st.prefill_padded_tokens += c
+        if off + n < len(req.prompt):
+            # intermediate chunk: don't block on the (unused) token — let the
+            # dispatch overlap with this tick's decode step
+            self._prefilling[slot] = off + n
+            st.prefill_time_s += time.perf_counter() - t0
+            return
+        tok = int(tok)                       # final chunk: sample first token
         now = time.perf_counter()
-        self.positions[slot] = n
+        st.prefill_time_s += now - t0
+        del self._prefilling[slot]
+        self.positions[slot] = len(req.prompt)
         req.generated.append(tok)
         req.t_first_token = now
-        st = self.stats
         st.prefills += 1
-        st.prefill_prompt_tokens += n
-        st.prefill_padded_tokens += bucket
-        st.prefill_time_s += now - t0
-        st.ttft_s.append(now - req.t_submit)
-        if len(st.ttft_s) > 20_000:           # bound memory on long-lived engines
-            del st.ttft_s[:10_000]
-        st.bucket_counts[bucket] = st.bucket_counts.get(bucket, 0) + 1
+        st.prefills_chunked += 1
+        st.prefill_prompt_tokens += len(req.prompt)
+        st.record_ttft(now - req.t_submit)
         if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
             self._finish(slot, now)
 
     def _finish(self, slot: int, now: float) -> None:
         req = self.requests[slot]
         req.done = True
+        req.aborted = False
         req.t_done = now
         self.requests[slot] = None
         self.stats.requests_completed += 1
         self.stats.tokens_generated += len(req.generated)
 
+    # ---------------------------------------------------------------- warmup
+    def warmup(self) -> None:
+        """Pre-compile every program the engine can ever run — all
+        (batch-bucket, bucket) prefill shapes, the chunk-continuation program
+        (when any admissible prompt is longer than the largest bucket), and
+        the decode program — then reset the pool.  After this, any trace
+        triggers zero recompiles regardless of arrival pattern."""
+        if self._queue or self._prefilling \
+                or any(r is not None for r in self.requests):
+            raise RuntimeError("warmup() requires an idle engine")
+        for b in self.buckets:
+            for nb in self.batch_buckets:
+                _, self.states = self._prefill(
+                    self.params, jnp.zeros((nb, b), jnp.int32),
+                    jnp.ones((nb,), jnp.int32),
+                    jnp.asarray(np.arange(nb) % self.slots, np.int32),
+                    self.states)
+        if self.max_len - 1 > self.buckets[-1]:
+            _, self.states = self._chunk(
+                self.params, jnp.zeros((1, self.prefill_chunk), jnp.int32),
+                jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32),
+                jnp.asarray(0, jnp.int32), self.states)
+        _, self.states = self._decode(
+            self.params, jnp.zeros((self.slots, 1), jnp.int32), self.states,
+            jnp.asarray(self.positions), self.memory,
+            jnp.zeros((self.slots,), bool))
+        self.states = self.model.init_states(self.slots, self.max_len)
+        self.positions[:] = 0
+        self._sync_compile_stats()
+
     # ---------------------------------------------------------------- decode
     def step(self) -> None:
-        """One engine tick: admit up to ``max_prefill_per_step`` queued
-        requests, then advance every active slot by one decode step."""
+        """One engine tick: advance each in-flight chunked prefill by one
+        chunk, admit up to ``max_prefill_per_step`` queued requests, then
+        advance every decoding slot by one lockstep decode step (dead and
+        mid-prefill slots are frozen by the ``active`` mask)."""
         t_tick = time.perf_counter()
+        for slot in list(self._prefilling):
+            self._advance_chunk(slot)
         self._admit(self.max_prefill_per_step)
-        active = [i for i, r in enumerate(self.requests) if r is not None]
+        busy = [i for i, r in enumerate(self.requests) if r is not None]
+        active = [i for i in busy if i not in self._prefilling]
         self.stats.ticks += 1
-        self.stats.occupancy_sum += len(active) / self.slots
+        self.stats.occupancy_sum += len(busy) / self.slots
         if not active:
             self._sync_compile_stats()
             self.stats.wall_time_s += time.perf_counter() - t_tick
             return
         toks = np.zeros((self.slots, 1), np.int32)
+        mask = np.zeros((self.slots,), bool)
         for i in active:
+            mask[i] = True
             toks[i, 0] = self.requests[i].generated[-1] \
                 if self.requests[i].generated else self.requests[i].prompt[-1]
         t0 = time.perf_counter()
         logits, self.states = self._decode(
             self.params, jnp.asarray(toks), self.states,
-            jnp.asarray(self.positions), self.memory)
+            jnp.asarray(self.positions), self.memory, jnp.asarray(mask))
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         now = time.perf_counter()
         self.stats.decode_steps += 1
@@ -280,8 +445,18 @@ class ServeEngine:
         # callers driving submit()+step() directly instead of run()
         self.stats.wall_time_s += time.perf_counter() - t_tick
 
-    def run(self, requests: list[Request], max_steps: int = 10_000
-            ) -> list[Request]:
+    def run(self, requests: list[Request], max_steps: int = 10_000,
+            on_truncate: str = "warn") -> list[Request]:
+        """Serve ``requests`` to completion (or ``max_steps`` ticks).
+
+        ``on_truncate``: what to do when max_steps is exhausted with work
+        still in flight — "warn" (default), "raise", or "ignore".  Survivors
+        are always marked ``req.aborted`` and counted in
+        ``stats.requests_aborted`` (a later run() that finishes them clears
+        the flag)."""
+        if on_truncate not in ("warn", "raise", "ignore"):
+            raise ValueError(f"on_truncate {on_truncate!r} not in "
+                             f"('warn', 'raise', 'ignore')")
         for r in requests:
             self.submit(r)
         steps = 0
@@ -289,7 +464,48 @@ class ServeEngine:
                 and steps < max_steps:
             self.step()
             steps += 1
+        leftovers = [r for r in self.requests if r is not None] \
+            + list(self._queue)
+        if leftovers:
+            # count each distinct request once, even across repeated
+            # truncated run() calls over the same survivors
+            self.stats.requests_aborted += sum(
+                1 for r in leftovers if not r.aborted)
+            for r in leftovers:
+                r.aborted = True
+            msg = (f"run() exhausted max_steps={max_steps} with "
+                   f"{len(leftovers)} unfinished requests "
+                   f"(rids {[r.rid for r in leftovers][:8]}...) — they remain "
+                   f"queued/in-slot and are marked aborted")
+            if on_truncate == "raise":
+                raise RuntimeError(msg)
+            if on_truncate == "warn":
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return requests
+
+
+# --------------------------------------------------------- state pool surgery
+def _state_row(states, i: int):
+    """Batch-1 view of row ``i`` (a static index) of a batch-N state tree.
+    Batch is the first axis for tail states, the second for stacked
+    (scan-group) states."""
+    return {"groups": jax.tree.map(lambda a: a[:, i:i + 1], states["groups"]),
+            "tail": jax.tree.map(lambda a: a[i:i + 1], states["tail"])}
+
+
+def _gather_slot(pool_states, slot):
+    """Batch-1 copy of slot ``slot`` (may be a traced scalar) of the pool."""
+
+    def tail(a):
+        return jax.lax.dynamic_slice(
+            a, (slot,) + (0,) * (a.ndim - 1), (1,) + a.shape[1:])
+
+    def grp(a):
+        return jax.lax.dynamic_slice(
+            a, (0, slot) + (0,) * (a.ndim - 2), (a.shape[0], 1) + a.shape[2:])
+
+    return {"groups": jax.tree.map(grp, pool_states["groups"]),
+            "tail": jax.tree.map(tail, pool_states["tail"])}
 
 
 def _splice_states(pool_states, one_states, slot):

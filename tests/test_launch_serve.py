@@ -1,0 +1,72 @@
+"""Serving launcher tests: the CLI flags must actually reach the engine
+(regression for main() silently dropping engine knobs), and build_engine must
+wire bucket caps / batching / chunking through to ServeEngine."""
+import jax
+import pytest
+
+from repro.configs import reduced_config
+from repro.launch import serve as serve_mod
+from repro.models import build_model
+
+
+def test_build_engine_passes_knobs_through():
+    cfg = reduced_config("qwen3-0.6b")
+    cfg = cfg.replace(num_layers=len(cfg.block_pattern))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = serve_mod.build_engine(
+        cfg, params, slots=3, max_len=128, max_bucket=32,
+        max_prefill_per_step=2, max_prefill_batch=2, prefill_chunk=16)
+    assert engine.buckets == (16, 32)           # capped below max_len
+    assert engine.prefill_chunk == 16
+    assert engine.max_prefill_per_step == 2
+    assert engine.max_prefill_batch == 2
+    assert engine.slots == 3 and engine.max_len == 128
+
+
+def test_cli_flags_reach_engine(monkeypatch):
+    """main() must forward every engine knob; the stub records what
+    ServeEngine actually receives."""
+    captured = {}
+
+    class StubStats:
+        def summary(self):
+            return {}
+
+    class StubEngine:
+        def __init__(self, model, params, **kwargs):
+            captured.update(kwargs)
+            self.buckets = kwargs.get("buckets") or (16, 32)
+            self.prefill_chunk = kwargs.get("prefill_chunk") or 32
+            self.stats = StubStats()
+            self.warmed = False
+
+        def warmup(self):
+            captured["warmed"] = True
+
+        def run(self, reqs):
+            captured["n_requests"] = len(reqs)
+            return reqs
+
+    monkeypatch.setattr(serve_mod, "ServeEngine", StubEngine)
+    serve_mod.main(["--arch", "qwen3-0.6b", "--reduced", "--requests", "3",
+                    "--slots", "2", "--max-len", "128", "--max-bucket", "32",
+                    "--max-prefill-per-step", "3", "--max-prefill-batch", "2",
+                    "--prefill-chunk", "16", "--long-prompts", "1",
+                    "--warmup"])
+    assert captured["slots"] == 2
+    assert captured["max_len"] == 128
+    assert captured["buckets"] == (16, 32)
+    assert captured["max_prefill_per_step"] == 3
+    assert captured["max_prefill_batch"] == 2
+    assert captured["prefill_chunk"] == 16
+    assert captured["warmed"] is True
+    assert captured["n_requests"] == 4          # 3 short + 1 long
+
+
+def test_cli_defaults_parse():
+    args = serve_mod.parse_args([])
+    assert args.max_prefill_per_step == 1
+    assert args.max_prefill_batch == 4
+    assert args.prefill_chunk is None
+    assert args.max_bucket is None

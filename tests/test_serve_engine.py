@@ -1,6 +1,10 @@
 """Bucketed continuous-batching engine tests: bucket selection, padded-prefill
-state splicing vs the unpadded batch-1 reference, slot eviction/refill, EOS,
-and the no-recompile-after-warmup guarantee (one compile per bucket)."""
+state splicing vs the unpadded batch-1 reference, batched same-bucket
+admission vs sequential batch-1, chunked prefill vs the unchunked reference,
+slot eviction/refill, EOS, dead-slot isolation, queue/stats hygiene, and the
+no-recompile-after-warmup guarantee (bounded compiled-program inventory)."""
+from collections import deque
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +12,8 @@ import pytest
 
 from repro.configs import reduced_config
 from repro.models import build_model
-from repro.serve.engine import (EngineStats, Request, ServeEngine, bucket_for,
-                                prefill_buckets)
+from repro.serve.engine import (TTFT_WINDOW, EngineStats, Request, ServeEngine,
+                                bucket_for, prefill_buckets)
 
 
 def _tiny_model(arch="qwen3-0.6b", layers=2):
@@ -146,6 +150,205 @@ def test_padded_prefill_logits_and_states_exact():
                                atol=1e-6, rtol=1e-6)
 
 
+# ---------------------------------------------------------- batched prefill
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "recurrentgemma-2b",
+                                  "falcon-mamba-7b"])
+def test_batched_prefill_matches_sequential(arch):
+    """Same-bucket admissions stacked into one (N, bucket) prefill call must
+    generate exactly what N sequential batch-1 prefills generate, with fewer
+    compiled calls than requests — covers all three state families."""
+    _, model, params = _tiny_model(arch)
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, 400, 4 + i).tolist() for i in range(4)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+
+    batched = ServeEngine(model, params, slots=4, max_len=64,
+                          max_prefill_per_step=4, max_prefill_batch=4)
+    sequential = ServeEngine(model, params, slots=4, max_len=64,
+                             max_prefill_per_step=1, max_prefill_batch=1)
+    rb = batched.run(reqs())
+    rs = sequential.run(reqs())
+    assert [r.generated for r in rb] == [r.generated for r in rs]
+    # all 4 prompts fit the 16-bucket: one compiled call admitted them all
+    assert batched.stats.prefill_calls == 1
+    assert batched.stats.prefills == 4
+    assert sequential.stats.prefill_calls == 4
+
+
+def test_batched_admission_splits_by_bucket_and_cap():
+    """Mixed buckets admitted in one tick become one call per bucket group;
+    a group larger than max_prefill_batch splits."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=6, max_len=64,
+                         max_prefill_per_step=6, max_prefill_batch=2)
+    lens = [3, 5, 20, 25, 7, 9]                 # buckets 16,16,32,32,16,16
+    reqs = [Request(rid=i, prompt=list(range(1, n + 1)), max_new_tokens=2)
+            for i, n in enumerate(lens)]
+    engine.run(reqs)
+    assert all(r.done for r in reqs)
+    assert engine.stats.prefills == 6
+    # bucket16 group of 4 splits into 2 calls of 2; bucket32 group is 1 call
+    assert engine.stats.prefill_calls == 3
+    assert engine.stats.batch_counts == {2: 3}
+
+
+def test_batch_bucket_padding_rows_are_inert():
+    """A group of 3 into batch buckets (1,2,4) pads to 4 — the padding row
+    targets a real slot but is spliced first and overwritten, so outputs
+    match the sequential reference exactly."""
+    _, model, params = _tiny_model()
+    prompts = [[7, 8, 9], [4, 5], [11, 3, 2, 6]]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+
+    batched = ServeEngine(model, params, slots=4, max_len=64,
+                          max_prefill_per_step=4, max_prefill_batch=4)
+    rb = batched.run(reqs())
+    assert batched.stats.prefill_calls == 1     # one padded (4,16) call
+    ref = ServeEngine(model, params, slots=4, max_len=64,
+                      max_prefill_per_step=1, max_prefill_batch=1)
+    rs = ref.run(reqs())
+    assert [r.generated for r in rb] == [r.generated for r in rs]
+
+
+# ---------------------------------------------------------- chunked prefill
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "recurrentgemma-2b",
+                                  "falcon-mamba-7b"])
+def test_chunked_prefill_matches_unchunked(arch):
+    """A prompt longer than the largest bucket prefills in chunk-continuation
+    calls (here 16+16+13) and must generate token-for-token what a one-shot
+    unchunked engine generates — KV, ring-buffer sliding-window KV, RG-LRU,
+    and SSM state families all resume correctly."""
+    _, model, params = _tiny_model(arch)
+    prompt = np.random.RandomState(5).randint(1, 400, 45).tolist()
+
+    chunked = ServeEngine(model, params, slots=2, max_len=128,
+                          buckets=(16,), prefill_chunk=16)
+    (rc,) = chunked.run([Request(rid=0, prompt=prompt, max_new_tokens=5)])
+    assert chunked.stats.prefill_chunks == 3
+    assert chunked.stats.prefills == 1
+
+    unchunked = ServeEngine(model, params, slots=2, max_len=128)
+    (ru,) = unchunked.run([Request(rid=0, prompt=prompt, max_new_tokens=5)])
+    assert rc.done and ru.done
+    assert rc.generated == ru.generated
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "recurrentgemma-2b",
+                                  "falcon-mamba-7b"])
+def test_prefill_offset_continuation_matches_full(arch):
+    """Model-level: prefill resumed via ``offset`` (ragged final chunk,
+    right-padded) reproduces the one-shot prefill — last-position logits and
+    the decode continuation match to float tolerance."""
+    _, model, params = _tiny_model(arch)
+    prompt = np.random.RandomState(11).randint(1, 400, 40).tolist()
+    L = len(prompt)
+
+    s_ref = model.init_states(1, 64)
+    lg_ref, s_ref, _ = model.prefill(
+        params, jnp.asarray([prompt], jnp.int32), s_ref)
+
+    s = model.init_states(1, 64)
+    off = 0
+    for piece in (prompt[0:16], prompt[16:32], prompt[32:40]):
+        n = len(piece)
+        toks = np.zeros((1, 16), np.int32)
+        toks[0, :n] = piece
+        lg, s, _ = model.prefill(params, jnp.asarray(toks), s,
+                                 length=jnp.asarray([n], jnp.int32),
+                                 offset=jnp.asarray([off], jnp.int32))
+        off += n
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg),
+                               atol=1e-6, rtol=1e-6)
+    tok = int(jnp.argmax(lg_ref[0, -1]))
+    lg1, _ = model.decode_step(params, jnp.asarray([[tok]], jnp.int32), s_ref,
+                               jnp.asarray([L], jnp.int32), None)
+    lg2, _ = model.decode_step(params, jnp.asarray([[tok]], jnp.int32), s,
+                               jnp.asarray([L], jnp.int32), None)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """While a long prompt prefills chunk-by-chunk, an already-running short
+    request keeps decoding: the chunks and decode steps share ticks, and the
+    short request's output is unaffected by the concurrent chunking."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=128,
+                         buckets=(16,), prefill_chunk=16,
+                         max_prefill_per_step=1)
+    short = Request(rid=0, prompt=[5, 6, 7], max_new_tokens=8)
+    long_ = Request(rid=1,
+                    prompt=np.random.RandomState(9).randint(
+                        1, 400, 60).tolist(),
+                    max_new_tokens=3)
+    engine.run([short, long_])
+    assert short.done and long_.done
+    st = engine.stats
+    assert st.prefill_chunks == 4               # ceil(60 / 16)
+    # chunks ran on the same ticks as decode steps — a serializing engine
+    # would need at least chunks + decode_steps ticks
+    assert st.ticks < st.prefill_chunks + st.decode_steps
+    # the short request decoded during the chunked prefill, unaffected by it
+    solo = ServeEngine(model, params, slots=2, max_len=128,
+                       buckets=(16,), prefill_chunk=16)
+    (ref,) = solo.run([Request(rid=0, prompt=[5, 6, 7], max_new_tokens=8)])
+    assert short.generated == ref.generated
+    # and the long prompt's first token arrived after its chunks, not before
+    assert long_.t_first_token > short.t_first_token
+
+
+# ------------------------------------------------------- dead-slot isolation
+def test_dead_slots_do_not_corrupt_state():
+    """Regression for the dead-slot decode-write bug: while a slot sits empty
+    (its neighbor still decoding), masked decode must leave it untouched so a
+    request later admitted into it generates exactly what a fresh engine
+    would.  Run A (long) + B (short) so B's slot is dead for several ticks,
+    then admit C into the recycled slot."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=64)
+    a = Request(rid=0, prompt=[3, 4, 5], max_new_tokens=9)
+    b = Request(rid=1, prompt=[6, 7], max_new_tokens=2)
+    engine.run([a, b])
+    assert a.done and b.done
+    c = Request(rid=2, prompt=[8, 9, 10], max_new_tokens=5)
+    engine.run([c])
+
+    fresh = ServeEngine(model, params, slots=2, max_len=64)
+    (ref,) = fresh.run([Request(rid=2, prompt=[8, 9, 10], max_new_tokens=5)])
+    assert c.generated == ref.generated
+
+
+def test_decode_active_mask_freezes_state_bitwise():
+    """Model-level: a decode step with active=False must leave every state
+    leaf (KV contents + length, conv context, recurrent h) bit-for-bit
+    unchanged, and active=True rows must match active=None bitwise."""
+    for arch in ["qwen3-0.6b", "recurrentgemma-2b", "falcon-mamba-7b"]:
+        _, model, params = _tiny_model(arch)
+        states = model.init_states(2, 32)
+        toks = jnp.asarray([[5, 9, 2], [7, 1, 4]], jnp.int32)
+        _, states, _ = model.prefill(params, toks, states)
+        pos = jnp.asarray([3, 3], jnp.int32)
+        step = jnp.asarray([[8], [8]], jnp.int32)
+        # both rows frozen: states unchanged
+        _, frozen = model.decode_step(params, step, states, pos,
+                                      active=jnp.asarray([False, False]))
+        for a, b in zip(jax.tree.leaves(states), jax.tree.leaves(frozen)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # both rows active: bitwise identical to no mask at all
+        lg_ref, s_ref = model.decode_step(params, step, states, pos)
+        lg_act, s_act = model.decode_step(params, step, states, pos,
+                                          active=jnp.asarray([True, True]))
+        np.testing.assert_array_equal(np.asarray(lg_ref), np.asarray(lg_act))
+        for a, b in zip(jax.tree.leaves(s_ref), jax.tree.leaves(s_act)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ------------------------------------------------------- eviction and refill
 def test_slot_eviction_on_max_tokens_and_refill_order():
     """More requests than slots: every request completes with exactly its
@@ -270,3 +473,103 @@ def test_stats_reset_keeps_compile_counts():
     engine.reset_stats()
     assert engine.stats.prefill_compiles == n
     assert engine.stats.prefills == 0 and engine.stats.ticks == 0
+
+
+def test_ttft_stats_exact_mean_max_and_bounded_window():
+    """Regression for the TTFT-trim bias: mean and max stay exact no matter
+    how many samples arrive (streaming aggregates), the kept window stays
+    bounded, and the median handles even-length windows correctly."""
+    st = EngineStats()
+    # even-length median: [1, 3] -> 2, not 3 (the old len//2 index bug)
+    st.record_ttft(1.0)
+    st.record_ttft(3.0)
+    assert st.summary()["ttft_ms"]["p50"] == pytest.approx(2000.0)
+    # stream far past the window: the biggest/earliest samples fall out of
+    # the window but mean/max must not drift
+    st = EngineStats()
+    n = 2 * TTFT_WINDOW + 500
+    vals = [float(i % 97) + (1000.0 if i == 3 else 0.0) for i in range(n)]
+    for v in vals:
+        st.record_ttft(v)
+    assert st.ttft_count == n
+    assert len(st.ttft_s) < 2 * TTFT_WINDOW          # bounded memory
+    s = st.summary()["ttft_ms"]
+    assert s["mean"] == pytest.approx(1e3 * sum(vals) / n)      # exact
+    assert s["max"] == pytest.approx(1e3 * max(vals))           # exact
+    # p50 is windowed (recent samples) — documented, and sane
+    assert s["p50"] == pytest.approx(1e3 * float(np.median(st.ttft_s)))
+
+
+def test_queue_is_deque_and_deep_queue_admits_fifo():
+    """Regression for the O(n) list.pop(0) admission queue: the queue is a
+    deque, a deep backlog submits in O(1) each, and admission order is
+    strictly FIFO."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=1, max_len=32)
+    assert isinstance(engine._queue, deque)
+    reqs = [Request(rid=i, prompt=[1 + i % 30, 2], max_new_tokens=1)
+            for i in range(5000)]
+    for r in reqs:
+        engine.submit(r)
+    assert len(engine._queue) == 5000
+    # drain a few ticks: admissions come off the head in submission order
+    for _ in range(3):
+        engine.step()
+    first_done = [r.rid for r in reqs if r.done]
+    assert first_done == sorted(first_done)
+    assert engine._queue[0].rid == 5000 - len(engine._queue)
+
+
+def test_run_truncation_marks_aborted_and_warns_or_raises():
+    """run() hitting max_steps must not silently hand back unfinished
+    requests: survivors are marked, counted, and reported."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=1, max_len=64)
+    reqs = [Request(rid=i, prompt=[2 + i, 3], max_new_tokens=30)
+            for i in range(3)]
+    with pytest.warns(RuntimeWarning, match="max_steps"):
+        engine.run(reqs, max_steps=2)
+    unfinished = [r for r in reqs if not r.done]
+    assert unfinished and all(r.aborted for r in unfinished)
+    assert engine.stats.requests_aborted == len(unfinished)
+    assert engine.stats.summary()["requests_aborted"] == len(unfinished)
+    # a second truncated run over the same survivors must not double-count
+    with pytest.warns(RuntimeWarning, match="max_steps"):
+        engine.run([], max_steps=1)
+    assert engine.stats.requests_aborted == len(unfinished)
+    # finishing them later clears the flag
+    engine.run([], max_steps=10_000)
+    assert all(r.done and not r.aborted for r in reqs)
+
+    engine2 = ServeEngine(model, params, slots=1, max_len=64)
+    with pytest.raises(RuntimeError, match="max_steps"):
+        engine2.run([Request(rid=9, prompt=[5, 6], max_new_tokens=30)],
+                    max_steps=1, on_truncate="raise")
+    with pytest.raises(ValueError):
+        engine2.run([], on_truncate="explode")
+
+
+# ---------------------------------------------------------------- warmup
+def test_warmup_precompiles_closed_program_inventory():
+    """warmup() compiles every (batch-bucket, bucket) prefill shape plus the
+    chunk and decode programs; any trace afterwards — batched admissions,
+    long chunked prompts, refills — adds zero compile-cache entries."""
+    _, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=128,
+                         buckets=(16, 32), prefill_chunk=32,
+                         max_prefill_per_step=2, max_prefill_batch=2)
+    engine.warmup()
+    # 2 buckets x batch buckets (1, 2) + 1 chunk program
+    assert engine.stats.prefill_compiles == 5
+    assert engine.stats.decode_compiles == 1
+    rng = np.random.RandomState(2)
+    reqs = [Request(rid=i, prompt=rng.randint(1, 400, n).tolist(),
+                    max_new_tokens=3)
+            for i, n in enumerate([4, 9, 20, 30, 50, 100, 7, 25])]
+    engine.run(reqs)
+    assert all(r.done for r in reqs)
+    assert engine.stats.prefill_compiles == 5    # zero recompiles
+    assert engine.stats.decode_compiles == 1
+    with pytest.raises(RuntimeError):            # mid-flight warmup refused
+        engine.submit(Request(rid=99, prompt=[1, 2], max_new_tokens=1))
+        engine.warmup()

@@ -12,7 +12,12 @@ Gates (all assertions, the acceptance criteria for the serving path):
     and decode-step latency stays within a generous factor of a decode-only
     baseline while long prompts prefill;
   * chunked output is identical (token-for-token) to the unchunked reference
-    across the attention, RG-LRU, and Mamba state families.
+    across the attention, RG-LRU, and Mamba state families;
+  * paged KV + prefix cache (the shared-prefix workload): nonzero
+    prefix-cache hit rate and fewer prefill tokens computed than the same
+    trace with the cache off, zero recompiles after warmup with paging on,
+    and peak blocks-in-use on a ragged trace strictly under the dense
+    ``slots x max_len`` equivalent — while generating the exact same tokens.
 
   PYTHONPATH=src python benchmarks/serve_bench.py
   PYTHONPATH=src python benchmarks/serve_bench.py --arch recurrentgemma-2b \\
@@ -79,6 +84,102 @@ def verify_chunked_identity(max_new: int = 6) -> dict:
     return out
 
 
+def paged_shared_prefix_gate(max_new: int = 6) -> dict:
+    """The paged-KV + prefix-cache acceptance workload (qwen3: the pure
+    full-attention stack, the one whose every layer is block-sharable).
+
+    Asserts (a) a nonzero prefix-cache hit rate and fewer prefill tokens
+    computed than the identical trace with the cache off, (b) zero decode/
+    prefill recompiles after warmup with paging on, (c) peak KV blocks in
+    use on a ragged-length trace strictly under the dense ``slots x max_len``
+    equivalent — with generated tokens identical to the cache-off engine.
+    """
+    import jax
+    from repro.configs import reduced_config
+    from repro.launch.serve import build_engine
+    from repro.models import build_model
+    from repro.serve.engine import Request
+
+    arch = "qwen3-0.6b"
+    cfg = reduced_config(arch)
+    cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    slots, max_len, bs = 4, 128, 16
+    # fewer physical blocks than the dense equivalent: paging must actually
+    # cap memory, not just re-index it
+    kv_blocks = slots * (max_len // bs) * 3 // 4
+
+    def engine(prefix_cache):
+        return build_engine(cfg, params, slots=slots, max_len=max_len,
+                            max_bucket=64, max_prefill_per_step=4,
+                            kv_block_size=bs, kv_blocks=kv_blocks,
+                            prefix_cache=prefix_cache)
+
+    ragged = [5, 11, 23, 34, 47, 60]
+
+    def trace():
+        rng = np.random.RandomState(13)
+        shared = rng.randint(1, cfg.vocab_size, 40).tolist()   # 2.5 blocks
+        out = [Request(rid=i, prompt=shared + rng.randint(
+                   1, cfg.vocab_size, 3 + i).tolist(),
+                   max_new_tokens=max_new) for i in range(8)]
+        out += [Request(rid=100 + i, prompt=rng.randint(
+                    1, cfg.vocab_size, n).tolist(), max_new_tokens=max_new)
+                for i, n in enumerate(ragged)]
+        return out
+
+    cold = engine(prefix_cache=False)
+    cold.warmup()
+    cold.run(trace())
+    cold_s = cold.stats.summary()
+
+    warm = engine(prefix_cache=True)
+    warm.warmup()
+    w0 = warm.stats.summary()
+    assert w0["prefill_compiles"] > 0, "compile counters unavailable"
+    warm.reset_stats()
+    done = warm.run(trace())
+    warm_s = warm.stats.summary()
+
+    # identical outputs with the cache on
+    ref = engine(prefix_cache=False)
+    ref_done = ref.run(trace())
+    assert [r.generated for r in done] == [r.generated for r in ref_done], \
+        "prefix cache changed generated tokens"
+
+    kv = warm_s["kv"]
+    # (a) the cache hit, and skipped real prefill work
+    assert kv["prefix_hit_rate"] > 0, kv
+    assert warm_s["prefill_tokens_computed"] \
+        < cold_s["prefill_tokens_computed"], (warm_s, cold_s)
+    # (b) paging + prefix shortcuts stay inside the warmed program inventory
+    recompiles = (warm_s["prefill_compiles"] - w0["prefill_compiles"]) \
+        + (warm_s["decode_compiles"] - w0["decode_compiles"])
+    assert recompiles == 0, \
+        f"{recompiles} recompiles after warmup with paging on"
+    # (c) ragged lengths keep peak blocks under the dense equivalent — gated
+    # against a bound derived from the trace's ACTUAL sequence lengths (the
+    # `slots` largest per-request block demands), not the pool size we
+    # configured, so a paging regression that pins whole-max_len worth of
+    # blocks per slot fails even inside a generously sized pool
+    from repro.serve.kvpool import blocks_for
+    dense_equiv = slots * (max_len // bs)
+    need = sorted(blocks_for(len(r.prompt) + max_new, bs) for r in trace())
+    concurrent_bound = sum(need[-slots:])
+    assert concurrent_bound < dense_equiv, (concurrent_bound, dense_equiv)
+    assert kv["blocks_peak"] <= concurrent_bound, (kv, concurrent_bound)
+    assert kv["decode_stalls"] == 0, kv     # the constrained pool sufficed
+    assert kv["pool_blocks"] < dense_equiv
+    return {"cold_prefill_tokens_computed":
+            cold_s["prefill_tokens_computed"],
+            "warm_prefill_tokens_computed":
+            warm_s["prefill_tokens_computed"],
+            "kv": kv, "dense_equivalent_blocks": dense_equiv,
+            "concurrent_demand_bound_blocks": concurrent_bound,
+            "recompiles_after_warmup": recompiles}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -91,6 +192,8 @@ def main() -> None:
     ap.add_argument("--max-prefill-batch", type=int, default=4)
     ap.add_argument("--skip-verify", action="store_true",
                     help="skip the 3-family chunked-identity check")
+    ap.add_argument("--skip-paged", action="store_true",
+                    help="skip the paged-KV shared-prefix workload")
     ap.add_argument("--json", default="", help="also write the report here")
     args = ap.parse_args()
 
@@ -156,6 +259,8 @@ def main() -> None:
     }
     if not args.skip_verify:
         report["chunked_identity"] = verify_chunked_identity()
+    if not args.skip_paged:
+        report["paged_prefix"] = paged_shared_prefix_gate()
     out = json.dumps(report, indent=1)
     print(out)
     if args.json:

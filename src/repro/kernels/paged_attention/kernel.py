@@ -1,0 +1,111 @@
+"""Paged decode-attention kernel — block-table gather with online softmax.
+
+One query token per slot attends to its logical KV sequence, which lives
+scattered across a global pool of fixed-size blocks (vLLM-style paging).  The
+block table is a *scalar-prefetch* operand: the KV BlockSpec index maps read
+``table[b, j]`` before the kernel body runs, so each grid step DMAs exactly
+the physical block that holds the slot's j-th logical block — K/V are never
+materialized per-slot in HBM, which is the whole point of paging.
+
+Grid: (B, nb) with the logical-block dimension innermost (sequential), so the
+fp32 VMEM scratch (m, l, acc) accumulates the online softmax across a slot's
+blocks exactly like the flash kernel accumulates across KV tiles.  GQA is
+handled in-kernel (q reshaped to (KVH, G, hd) against the block's (bs, KVH,
+hd)); per-slot lengths ride in the second scalar-prefetch operand and mask
+both the not-yet-written tail of the last block and whole unallocated blocks
+(whose table entries are clamped by ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(table_ref, length_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float, bs: int,
+                         nb: int, kvh: int, group: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    h = kvh * group
+    hd = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32) * scale            # (H, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (bs, KVH, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    qg = q.reshape(kvh, group, hd)
+    s = jnp.einsum("nGd,tnd->nGt", qg, k)               # (KVH, G, bs)
+    s = s.reshape(h, bs)
+
+    kv_pos = j * bs + jax.lax.iota(jnp.int32, bs)[None, :]
+    s = jnp.where(kv_pos <= length_ref[b], s, NEG_INF)  # incl. the new token
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                              # (H, bs)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jnp.einsum("nGt,tnd->nGd", p.reshape(kvh, group, bs), v)
+    acc_ref[...] = acc_ref[...] * corr + pv.reshape(h, hd)
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _write():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_raw(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_table: jax.Array,
+                               lengths: jax.Array, *,
+                               interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k_pool/v_pool: (N, bs, KVH, hd); block_table: (B, nb)
+    int32 with every entry in [0, N); lengths: (B,) int32 — the highest valid
+    logical position per slot (the freshly written token's position).
+    Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    n, bs, kvh, _ = k_pool.shape
+    _, nb = block_table.shape
+    assert h % kvh == 0
+    group = h // kvh
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=1.0 / math.sqrt(hd), bs=bs, nb=nb,
+        kvh=kvh, group=group)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # block_table, lengths
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda i, j, tbl, lens: (i, 0, 0)),
+            # the paging gather: logical block j of slot i lives at
+            # physical block table[i, j] of the pool
+            pl.BlockSpec((1, bs, kvh, hd),
+                         lambda i, j, tbl, lens: (tbl[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, kvh, hd),
+                         lambda i, j, tbl, lens: (tbl[i, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda i, j, tbl, lens: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pool, v_pool)

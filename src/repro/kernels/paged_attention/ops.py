@@ -1,0 +1,40 @@
+"""Jit'd wrapper: scatter the new token's K/V through the block table, then
+run the paged gather-attention kernel over the updated pool."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import use_interpret
+from .kernel import paged_decode_attention_raw
+
+
+@jax.jit
+def paged_decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
+                           k_pool: jax.Array, v_pool: jax.Array,
+                           block_table: jax.Array, lengths: jax.Array):
+    """One-token paged attention.
+
+    q/new_k/new_v: (B,1,H|KVH,hd); k_pool/v_pool: (N,bs,KVH,hd);
+    block_table: (B,nb) — entries >= N mean "no block" (writes through them
+    drop; reads clamp and are masked by ``lengths``); lengths: (B,) tokens
+    already cached.  Writes each slot's new KV at logical position
+    ``lengths[b]``, attends over positions 0..lengths[b], and returns
+    (out (B,1,H,hd), k_pool, v_pool).
+    """
+    b, _, h, hd = q.shape
+    n, bs = k_pool.shape[0], k_pool.shape[1]
+    blk = jnp.take_along_axis(block_table, (lengths // bs)[:, None],
+                              axis=1)[:, 0]
+    off = lengths % bs
+    k_pool = k_pool.at[blk, off].set(new_k[:, 0].astype(k_pool.dtype),
+                                     mode="drop")
+    v_pool = v_pool.at[blk, off].set(new_v[:, 0].astype(v_pool.dtype),
+                                     mode="drop")
+    table = jnp.minimum(block_table, n - 1).astype(jnp.int32)
+    out = paged_decode_attention_raw(
+        q[:, 0], k_pool, v_pool, table, lengths.astype(jnp.int32),
+        interpret=use_interpret())
+    return out[:, None], k_pool, v_pool

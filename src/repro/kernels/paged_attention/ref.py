@@ -1,0 +1,19 @@
+"""Pure-jnp oracle — re-exports the model-level paged decode attention.
+
+``models.attention.paged_decode_attention`` is the canonical jnp
+implementation (the serving path's CPU/dry-run lowering); it is itself gated
+bitwise-identical to the dense ``decode_attention`` in
+tests/test_serve_kvpool.py, so kernel == ref == dense transitively."""
+import jax.numpy as jnp
+
+from ...models.attention import PagedKVCache
+from ...models.attention import paged_decode_attention as _model_paged
+
+
+def paged_decode_attention_ref(q, new_k, new_v, k_pool, v_pool, block_table,
+                               lengths):
+    """Same contract as ops.paged_decode_attention."""
+    cache = PagedKVCache(k=k_pool, v=v_pool,
+                         length=lengths.astype(jnp.int32))
+    out, cache = _model_paged(q, new_k, new_v, cache, block_table)
+    return out, cache.k, cache.v

@@ -21,6 +21,9 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
                  min_bucket: int = 16, max_bucket: int | None = None,
                  max_prefill_per_step: int = 1, max_prefill_batch: int = 4,
                  prefill_chunk: int | None = None,
+                 kv_block_size: int | None = None,
+                 kv_blocks: int | None = None,
+                 prefix_cache: bool = True,
                  plan_cfg=None, profiles=None) -> ServeEngine:
     """Engine with the prefill/decode programs routed through their
     Mensa execution profiles (runtime-safe overrides only — the phase models
@@ -29,7 +32,8 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
     that picks them up as soon as measurement adds them.  Pass ``profiles``
     (a (prefill, decode) pair) to reuse already-computed plans.
     ``max_bucket`` caps the prefill buckets below max_len so longer prompts
-    exercise the chunked path."""
+    exercise the chunked path.  ``kv_block_size``/``kv_blocks``/
+    ``prefix_cache`` switch KV storage to the paged pool (serve/kvpool.py)."""
     prefill_prof, decode_prof = profiles or phase_profiles(plan_cfg or cfg)
     model = build_model(cfg)
     if params is None:
@@ -45,6 +49,8 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
         max_prefill_per_step=max_prefill_per_step,
         max_prefill_batch=max_prefill_batch,
         prefill_chunk=prefill_chunk,
+        kv_block_size=kv_block_size, kv_blocks=kv_blocks,
+        prefix_cache=prefix_cache,
         prefill_model=build_model(prefill_cfg) if prefill_cfg != cfg else None,
         decode_model=build_model(decode_cfg) if decode_cfg != cfg else None)
 
@@ -74,6 +80,23 @@ def parse_args(argv=None) -> argparse.Namespace:
                          "largest bucket (chunked prefill)")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-compile every engine program before serving")
+    ap.add_argument("--kv-block-size", type=int, default=None,
+                    help="page the KV cache into blocks of this many tokens "
+                         "(must divide max-len); default: dense KV")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="physical blocks in the paged pool (default: the "
+                         "dense equivalent slots*max-len/block-size)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share same-prefix KV blocks across requests "
+                         "(paged engines, full-attention models)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for submitted requests "
+                         "(0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k most likely tokens (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1 = off)")
     return ap.parse_args(argv)
 
 
@@ -96,13 +119,18 @@ def main(argv=None) -> None:
                           max_prefill_per_step=args.max_prefill_per_step,
                           max_prefill_batch=args.max_prefill_batch,
                           prefill_chunk=args.prefill_chunk,
+                          kv_block_size=args.kv_block_size,
+                          kv_blocks=args.kv_blocks,
+                          prefix_cache=args.prefix_cache,
                           profiles=(prefill_prof, decode_prof))
     if args.warmup:
         engine.warmup()
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i,
                     prompt=rng.randint(1, cfg.vocab_size, 4 + i % 6).tolist(),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new,
+                    temperature=args.temperature, top_k=args.top_k,
+                    top_p=args.top_p)
             for i in range(args.requests)]
     if args.long_prompts:
         long_len = min(engine.buckets[-1] + engine.prefill_chunk,
@@ -116,7 +144,9 @@ def main(argv=None) -> None:
         reqs += [Request(rid=args.requests + i,
                          prompt=rng.randint(1, cfg.vocab_size,
                                             long_len).tolist(),
-                         max_new_tokens=args.max_new)
+                         max_new_tokens=args.max_new,
+                         temperature=args.temperature, top_k=args.top_k,
+                         top_p=args.top_p)
                  for i in range(args.long_prompts)]
     engine.run(reqs)
     print(json.dumps(engine.stats.summary(), indent=1))

@@ -236,6 +236,159 @@ def decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
     return out, KVCache(k=k, v=v, length=cache.length + inc)
 
 
+# ------------------------------------------------------------------ paged KV
+class PagedKVCache(NamedTuple):
+    """KV storage as a pool of fixed-size blocks shared by all slots.
+
+    ``k``/``v`` have NO batch axis — they are the layer's global block pool;
+    a per-slot *block table* (passed separately, shape ``(B, max_len/bs)``)
+    maps logical position ``p`` of slot ``b`` to physical storage
+    ``k[table[b, p // bs], p % bs]``.  Table entries >= the pool size mean
+    "no block": writes through them are dropped and reads are masked, so one
+    compiled program serves every allocation pattern.  Blocks may be shared
+    read-only between slots (prefix cache); the host-side allocator
+    (serve/kvpool.py) guarantees no two slots ever *write* the same block.
+    """
+    k: jax.Array        # (N_blocks, block_size, KVH, hd)
+    v: jax.Array
+    length: jax.Array   # (B,) int32 — tokens currently cached per slot
+
+
+def init_paged_kv_cache(batch: int, num_blocks: int, block_size: int,
+                        kv_heads: int, head_dim: int,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    return PagedKVCache(
+        k=jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
+        v=jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
+def gather_paged_kv(cache: PagedKVCache, block_table: jax.Array):
+    """Materialize each slot's logical KV sequence through its table row:
+    (B, nb*bs, KVH, hd).  Sentinel entries clamp to the last block — their
+    positions are always masked by the callers' validity masks."""
+    b, nb = block_table.shape
+    bs = cache.k.shape[1]
+    idx = jnp.minimum(block_table, cache.k.shape[0] - 1)
+    ks = cache.k[idx].reshape(b, nb * bs, *cache.k.shape[2:])
+    vs = cache.v[idx].reshape(b, nb * bs, *cache.v.shape[2:])
+    return ks, vs
+
+
+def _scatter_paged(pool: jax.Array, blk: jax.Array, off: jax.Array,
+                   vals: jax.Array) -> jax.Array:
+    """pool (N,bs,...), blk/off integer index arrays of matching lead shape,
+    vals (*blk.shape, ...).  Out-of-range block ids drop the write."""
+    return pool.at[blk, off].set(vals.astype(pool.dtype), mode="drop")
+
+
+def paged_decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
+                           cache: PagedKVCache, block_table: jax.Array, *,
+                           write_mask: jax.Array | None = None
+                           ) -> tuple[jax.Array, PagedKVCache]:
+    """One-token attention against the paged pool — the paged twin of
+    :func:`decode_attention`, bitwise-identical to it on any trace whose
+    block table tiles ``max_len`` exactly (nb * bs == Smax).
+
+    q/new_k/new_v: (B,1,H|KVH,hd).  Writes the new KV at logical position
+    ``length[b]`` through the block table, then attends over the gathered
+    sequence.  ``write_mask``: (B,) bool — False rows drop the write and
+    keep their length, exactly like the dense path's masked rows.
+    """
+    b, one, h, hd = q.shape
+    _, _, kvh, _ = new_k.shape
+    g = h // kvh
+    bs = cache.k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    idx = cache.length                                           # (B,)
+    blk = jnp.take_along_axis(block_table, (idx // bs)[:, None], axis=1)[:, 0]
+    if write_mask is not None:
+        blk = jnp.where(write_mask, blk, jnp.int32(cache.k.shape[0]))
+    k_pool = _scatter_paged(cache.k, blk, idx % bs, new_k[:, 0])
+    v_pool = _scatter_paged(cache.v, blk, idx % bs, new_v[:, 0])
+    new_cache = cache._replace(k=k_pool, v=v_pool)
+    ks, vs = gather_paged_kv(new_cache, block_table)             # (B,Smax,..)
+    smax = ks.shape[1]
+
+    qg = (q.reshape(b, kvh, g, hd) * scale).astype(jnp.float32)
+    s = jnp.einsum("bnGd,bknd->bnGk", qg, ks.astype(jnp.float32))
+    pos = jnp.arange(smax)[None, :]
+    valid = pos <= cache.length[:, None]                         # incl. new tok
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnGk,bknd->bnGd", p, vs.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(q.dtype)
+    inc = 1 if write_mask is None else write_mask.astype(jnp.int32)
+    return out, new_cache._replace(length=cache.length + inc)
+
+
+def paged_fill_cache(cache: PagedKVCache, k: jax.Array, v: jax.Array,
+                     block_table: jax.Array, *,
+                     length: jax.Array | None = None) -> PagedKVCache:
+    """Write prefill K/V through the block table (the paged `_fill_cache`).
+
+    k/v: (B,S,KVH,hd) right-padded; only rows < ``length`` are written —
+    unlike the dense path there is no garbage-then-overwrite dance, padding
+    writes are simply dropped.  Rows whose table entry is the sentinel (e.g.
+    batch-bucket padding rows aliasing a real slot) drop every write, so the
+    reverse-splice trick isn't needed for the KV part."""
+    b, s = k.shape[0], k.shape[1]
+    bs = cache.k.shape[1]
+    j = jnp.arange(s)
+    blk = jnp.take_along_axis(
+        block_table, jnp.broadcast_to(j[None, :] // bs, (b, s)), axis=1)
+    off = jnp.broadcast_to(j[None, :] % bs, (b, s))
+    if length is not None:
+        valid = j[None, :] < length[:, None]
+        blk = jnp.where(valid, blk, jnp.int32(cache.k.shape[0]))
+    k_pool = _scatter_paged(cache.k, blk, off, k)
+    v_pool = _scatter_paged(cache.v, blk, off, v)
+    new_len = cache.length + (s if length is None else length)
+    return PagedKVCache(k_pool, v_pool, new_len)
+
+
+def paged_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                          cache: PagedKVCache, block_table: jax.Array, *,
+                          offset: jax.Array, length: jax.Array
+                          ) -> tuple[jax.Array, PagedKVCache]:
+    """Chunked-prefill continuation against the paged pool (full causal
+    attention only — the paged twin of the ``window == 0`` arm of
+    :func:`chunk_attention`).
+
+    q/k/v: (B,C,H|KVH,hd) at absolute positions ``offset + i``; the chunk's
+    real rows are written through the table, then every q row attends to its
+    full causal horizon over the gathered sequence.  The prefix below
+    ``offset`` may live in *shared* blocks (prefix-cache hits): because KV
+    depends only on the token prefix, the gathered values are exactly what
+    this slot would have computed, so the continuation — and every token
+    decoded after it — matches a cold full prefill.
+    """
+    b, c, h, hd = q.shape
+    _, _, kvh, _ = k.shape
+    g = h // kvh
+    bs = cache.k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = offset[:, None] + jnp.arange(c)[None, :]            # (B,C)
+    pos = q_pos                                                 # write targets
+    blk = jnp.take_along_axis(block_table, pos // bs, axis=1)
+    valid = jnp.arange(c)[None, :] < length[:, None]
+    blk = jnp.where(valid, blk, jnp.int32(cache.k.shape[0]))
+    k_pool = _scatter_paged(cache.k, blk, pos % bs, k)
+    v_pool = _scatter_paged(cache.v, blk, pos % bs, v)
+    new_cache = cache._replace(k=k_pool, v=v_pool)
+    ks, vs = gather_paged_kv(new_cache, block_table)            # (B,Smax,...)
+    smax = ks.shape[1]
+
+    qg = (q.reshape(b, c, kvh, g, hd) * scale).astype(jnp.float32)
+    s = jnp.einsum("bqnGd,bknd->bnGqk", qg, ks.astype(jnp.float32))
+    mask = jnp.arange(smax)[None, None, :] <= q_pos[:, :, None]  # (B,C,Smax)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnGqk,bknd->bnGqd", p, vs.astype(jnp.float32))
+    out = jnp.moveaxis(out, 3, 1).reshape(b, c, h, hd)
+    return out.astype(q.dtype), new_cache._replace(length=offset + length)
+
+
 # ---------------------------------------------------- chunked prefill (resume)
 def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, cache: KVCache,
                     *, offset: jax.Array, length: jax.Array, window: int = 0

@@ -115,6 +115,7 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                 memory: jax.Array | None = None,
                 length: jax.Array | None = None,
                 offset: jax.Array | None = None,
+                block_table: jax.Array | None = None,
                 ) -> tuple[jax.Array, BlockState | None, jax.Array]:
     """One residual block. mode: train|prefill|decode.
     ``length``: (B,) valid prefix lengths for right-padded prefill — serving
@@ -124,27 +125,41 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
     ``offset``: (B,) tokens already consumed when this prefill call resumes a
     chunked prompt — attention continues against the cache, recurrences
     continue from the carried state (zeroed where offset == 0).
+    ``block_table``: (B, max_len/bs) physical block ids when this block's KV
+    cache is paged (state.kv is a PagedKVCache) — one table shared by every
+    paged layer.
     Returns (x, new_state, load_balance_aux)."""
     new_state = state
     lb = jnp.zeros((), jnp.float32)
+    paged = state is not None and isinstance(state.kv, attn_lib.PagedKVCache)
     if kind in ("attn", "local", "dec", "enc"):
         h = _norm(cfg, p["ln1"], x)
         q, k, v = attn_lib.qkv_project(
             p["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
             positions, rope_theta=cfg.rope_theta, use_rope=(kind != "enc"))
         if mode == "decode":
-            out, kv = attn_lib.decode_attention(
-                q, k, v, state.kv,
-                window=cfg.window if kind == "local" else 0,
-                write_mask=None if length is None else length > 0)
+            wm = None if length is None else length > 0
+            if paged:
+                out, kv = attn_lib.paged_decode_attention(
+                    q, k, v, state.kv, block_table, write_mask=wm)
+            else:
+                out, kv = attn_lib.decode_attention(
+                    q, k, v, state.kv,
+                    window=cfg.window if kind == "local" else 0,
+                    write_mask=wm)
             new_state = state._replace(kv=kv)
         elif mode == "prefill" and offset is not None:
             if kind not in ("attn", "local"):
                 raise NotImplementedError(
                     "chunked prefill supports decoder-only self-attention")
-            out, kv = attn_lib.chunk_attention(
-                q, k, v, state.kv, offset=offset, length=length,
-                window=cfg.window if kind == "local" else 0)
+            if paged:
+                out, kv = attn_lib.paged_chunk_attention(
+                    q, k, v, state.kv, block_table, offset=offset,
+                    length=length)
+            else:
+                out, kv = attn_lib.chunk_attention(
+                    q, k, v, state.kv, offset=offset, length=length,
+                    window=cfg.window if kind == "local" else 0)
             new_state = state._replace(kv=kv)
         elif kind == "local":
             if q.shape[1] % cfg.window == 0:
@@ -166,8 +181,12 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                                            f32_probs=cfg.attn_f32)
         if mode == "prefill" and offset is None \
                 and kind in ("attn", "local", "dec"):
-            kv = _fill_cache(state.kv, k, v, window=cfg.window
-                             if kind == "local" else 0, length=length)
+            if paged:
+                kv = attn_lib.paged_fill_cache(state.kv, k, v, block_table,
+                                               length=length)
+            else:
+                kv = _fill_cache(state.kv, k, v, window=cfg.window
+                                 if kind == "local" else 0, length=length)
             new_state = state._replace(kv=kv)
         b, s, _, _ = out.shape
         o = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
@@ -421,15 +440,33 @@ class Model:
         return loss, metrics
 
     # ----------------------------------------------------------- serving path
-    def init_states(self, batch: int, max_len: int) -> PyTree:
-        """Stacked per-group states + tail states for the serving path."""
+    def init_states(self, batch: int, max_len: int, *,
+                    kv_block_size: int | None = None,
+                    kv_blocks: int | None = None) -> PyTree:
+        """Stacked per-group states + tail states for the serving path.
+
+        ``kv_block_size``/``kv_blocks``: when set, full-attention layers
+        ("attn"/"dec" self-attention) store KV as a PAGED pool of
+        ``kv_blocks`` blocks of ``kv_block_size`` tokens, addressed through a
+        per-slot block table passed to prefill/decode_step.  Sliding-window
+        layers keep their dense ring (already right-sized at ``window``
+        tokens — the Mensa lesson of per-layer-class memory organization) and
+        recurrent/SSM layers keep their fixed-size state."""
         cfg = self.cfg
         dt = jnp.dtype(cfg.compute_dtype)
+        if kv_block_size is not None and kv_blocks is None:
+            kv_blocks = batch * (-(-max_len // kv_block_size))
 
         def one(kind):
             if kind in ("attn", "dec"):
-                kv = attn_lib.init_kv_cache(batch, max_len, cfg.num_kv_heads,
-                                            cfg.head_dim, dt)
+                if kv_block_size is not None:
+                    kv = attn_lib.init_paged_kv_cache(
+                        batch, kv_blocks, kv_block_size, cfg.num_kv_heads,
+                        cfg.head_dim, dt)
+                else:
+                    kv = attn_lib.init_kv_cache(batch, max_len,
+                                                cfg.num_kv_heads,
+                                                cfg.head_dim, dt)
                 return BlockState(kv=kv)
             if kind == "local":
                 kv = attn_lib.init_kv_cache(batch, min(max_len, cfg.window),
@@ -456,7 +493,8 @@ class Model:
                 "tail": [one(k) for k in self.tail_kinds]}
 
     def _run_stack_serving(self, params, states, x, positions, mode,
-                           memory=None, length=None, offset=None):
+                           memory=None, length=None, offset=None,
+                           block_table=None):
         cfg = self.cfg
 
         def group_fn(x, gp_state):
@@ -466,7 +504,7 @@ class Model:
                 x, ns, _ = apply_block(cfg, kind, gp[str(j)], x, positions,
                                        mode=mode, state=gstate[str(j)],
                                        memory=memory, length=length,
-                                       offset=offset)
+                                       offset=offset, block_table=block_table)
                 new_states[str(j)] = ns
             return x, new_states
 
@@ -494,12 +532,13 @@ class Model:
                                  self.tail_kinds):
             x, ns, _ = apply_block(cfg, kind, p_t, x, positions,
                                    mode=mode, state=st, memory=memory,
-                                   length=length, offset=offset)
+                                   length=length, offset=offset,
+                                   block_table=block_table)
             new_tail.append(ns)
         return x, {"groups": new_group_states, "tail": new_tail}
 
     def prefill(self, params, tokens, states, modality=None, src_embeds=None,
-                length=None, offset=None):
+                length=None, offset=None, block_table=None):
         """Process the prompt; fill caches; return last-position logits.
 
         ``length``: optional (B,) int32 valid prompt lengths for RIGHT-padded
@@ -516,7 +555,11 @@ class Model:
         recurrent/conv state continues from the carry (zeroed per row where
         offset == 0, so a recycled slot starts clean), and logits land at
         chunk position length-1.  Requires ``length``; decoder-only token
-        models only."""
+        models only.
+
+        ``block_table``: (B, max_len/bs) int32, required when the states were
+        built with ``init_states(kv_block_size=...)`` — paged layers write
+        (and, for chunked continuation, read) their KV through it."""
         cfg = self.cfg
         memory = None
         if offset is not None:
@@ -532,7 +575,8 @@ class Model:
         positions = jnp.broadcast_to(base, x.shape[:2]) if offset is None \
             else offset[:, None] + base
         x, states = self._run_stack_serving(params, states, x, positions,
-                                            "prefill", memory, length, offset)
+                                            "prefill", memory, length, offset,
+                                            block_table)
         x = _norm(cfg, params["final_norm"], x)
         if length is None:
             x_last = x[:, -1:]
@@ -545,20 +589,25 @@ class Model:
         return logits, states, memory
 
     def decode_step(self, params, token, states, position, memory=None,
-                    active=None):
+                    active=None, block_table=None):
         """token: (B,1) -> logits (B,1,V), updated states.
 
         ``active``: optional (B,) bool — False rows leave every piece of
         per-slot state (KV append + cache length, conv context, recurrent h)
         bit-for-bit unchanged and produce garbage logits, so an engine can
         tick a pool containing dead or mid-prefill slots without corrupting
-        them.  Active rows are bitwise identical to active=None."""
+        them.  Active rows are bitwise identical to active=None.
+
+        ``block_table``: (B, max_len/bs) int32 for paged states — the new
+        token's KV is scattered through it and attention gathers the slot's
+        logical sequence from the block pool."""
         cfg = self.cfg
         x = self._embed_inputs(params, token)
         positions = jnp.broadcast_to(position[:, None], token.shape)
         length = None if active is None else active.astype(jnp.int32)
         x, states = self._run_stack_serving(params, states, x, positions,
-                                            "decode", memory, length)
+                                            "decode", memory, length,
+                                            block_table=block_table)
         x = _norm(cfg, params["final_norm"], x)
         table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
         logits = unembed(x, table)[..., :cfg.vocab_size]

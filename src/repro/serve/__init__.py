@@ -1,1 +1,6 @@
-"""repro.serve"""
+"""repro.serve — continuous-batching engine, paged KV pool, sampling."""
+from .engine import EngineStats, Request, ServeEngine
+from .kvpool import KVBlockPool, PagedKVManager, RadixPrefixCache
+
+__all__ = ["EngineStats", "Request", "ServeEngine", "KVBlockPool",
+           "PagedKVManager", "RadixPrefixCache"]

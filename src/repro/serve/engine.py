@@ -20,6 +20,23 @@ continuation for causal/sliding-window attention, conv + RG-LRU/SSM carry for
 the recurrent families).  Decode latency for already-running slots therefore
 stays bounded by one chunk, not one full long prompt.
 
+KV storage is optionally *paged* (``kv_block_size=...``): full-attention
+layers keep their KV in a global pool of fixed-size blocks addressed through
+per-slot block tables (serve/kvpool.py), so KV memory scales with actual
+sequence lengths instead of ``slots x max_len``, finished requests release
+their blocks the same tick they retire, and a radix-tree prefix cache maps
+prompts sharing a token prefix onto shared read-only blocks — the shared
+portion skips prefill entirely (it resumes through the chunk-continuation
+program at ``offset = matched``), with a single block clone (copy-on-write)
+when the divergence falls inside a block.  Sliding-window layers keep their
+dense ring (already right-sized at ``window``) and recurrent/SSM layers their
+fixed-size state — per-layer-class memory organization, the Mensa reading of
+the paper's memory-handling pitfall.
+
+Sampling is per-request (temperature / top-k / top-p / seed carried in the
+slot pool) and happens inside the jitted programs; greedy requests take the
+exact argmax path, bit-for-bit identical to a sampling-free engine.
+
 ``step`` interleaves work per tick — in-flight chunks advance, then at most
 ``max_prefill_per_step`` admissions, then one lockstep decode step whose
 ``active`` mask freezes dead and mid-prefill slots bit-for-bit.
@@ -41,7 +58,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..models.attention import PagedKVCache
 from ..models.transformer import Model
+from .kvpool import PagedKVManager
+from .sampling import sample_tokens
 
 # TTFT samples kept for windowed percentiles (mean/max stay exact streaming)
 TTFT_WINDOW = 8192
@@ -84,6 +104,9 @@ class EngineStats:
     prefill_calls: int = 0              # compiled batched-prefill invocations
     prefill_chunks: int = 0             # chunk-continuation invocations
     prefill_prompt_tokens: int = 0
+    # prompt tokens actually run through a prefill program — prefix-cache
+    # hits skip the shared portion, so computed < prompt when the cache hits
+    prefill_tokens_computed: int = 0
     prefill_padded_tokens: int = 0
     prefill_time_s: float = 0.0
     decode_steps: int = 0
@@ -102,6 +125,19 @@ class EngineStats:
     prefill_compiles: int = 0           # jit cache entries (incl. chunk prog)
     decode_compiles: int = 0
     wall_time_s: float = 0.0
+    # ---- paged KV pool (all zero on dense engines) ----
+    kv_pool_blocks: int = 0             # physical blocks in the pool
+    kv_block_size: int = 0
+    kv_blocks_in_use: int = 0           # referenced blocks, end of last tick
+    kv_blocks_peak: int = 0
+    kv_blocks_cached: int = 0           # evictable prefix-cache blocks
+    kv_occupancy_sum: float = 0.0       # sum over ticks of in_use/pool
+    prefix_queries: int = 0
+    prefix_hits: int = 0
+    prefix_tokens_reused: int = 0
+    blocks_copied: int = 0              # copy-on-write clones
+    blocks_evicted: int = 0             # LRU evictions of cached blocks
+    decode_stalls: int = 0              # slot-ticks frozen waiting for blocks
 
     def record_ttft(self, v: float) -> None:
         self.ttft_count += 1
@@ -114,7 +150,7 @@ class EngineStats:
 
     def summary(self) -> dict:
         dec_ms = 1e3 * self.decode_time_s / max(self.decode_steps, 1)
-        return {
+        out = {
             "requests_completed": self.requests_completed,
             "requests_aborted": self.requests_aborted,
             "tokens_generated": self.tokens_generated,
@@ -133,6 +169,8 @@ class EngineStats:
             "prefills_chunked": self.prefills_chunked,
             "prefill_calls": self.prefill_calls,
             "prefill_chunks": self.prefill_chunks,
+            "prefill_prompt_tokens": self.prefill_prompt_tokens,
+            "prefill_tokens_computed": self.prefill_tokens_computed,
             "prefill_time_s": self.prefill_time_s,
             "prefill_padding_overhead": (
                 self.prefill_padded_tokens / self.prefill_prompt_tokens - 1.0
@@ -144,6 +182,24 @@ class EngineStats:
             "decode_compiles": self.decode_compiles,
             "wall_time_s": self.wall_time_s,
         }
+        if self.kv_pool_blocks:
+            out["kv"] = {
+                "pool_blocks": self.kv_pool_blocks,
+                "block_size": self.kv_block_size,
+                "blocks_in_use": self.kv_blocks_in_use,
+                "blocks_peak": self.kv_blocks_peak,
+                "blocks_cached": self.kv_blocks_cached,
+                "occupancy": self.kv_occupancy_sum / max(self.ticks, 1),
+                "prefix_queries": self.prefix_queries,
+                "prefix_hits": self.prefix_hits,
+                "prefix_hit_rate": self.prefix_hits / self.prefix_queries
+                if self.prefix_queries else 0.0,
+                "prefix_tokens_reused": self.prefix_tokens_reused,
+                "blocks_copied": self.blocks_copied,
+                "blocks_evicted": self.blocks_evicted,
+                "decode_stalls": self.decode_stalls,
+            }
+        return out
 
 
 @dataclass
@@ -152,6 +208,12 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 32
     eos_id: int = -1
+    # sampling: temperature <= 0 is exact greedy argmax (the default);
+    # seed None derives a per-request stream from rid
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int | None = None
     generated: list[int] = field(default_factory=list)
     done: bool = False
     aborted: bool = False               # unfinished when run() gave up
@@ -168,17 +230,27 @@ class ServeEngine:
                  max_prefill_per_step: int = 1,
                  max_prefill_batch: int = 4,
                  prefill_chunk: int | None = None,
+                 kv_block_size: int | None = None,
+                 kv_blocks: int | None = None,
+                 prefix_cache: bool = True,
                  prefill_model: Model | None = None,
                  decode_model: Model | None = None):
+        """``greedy`` is a legacy knob: sampling is now per-request
+        (Request.temperature/top_k/top_p/seed) and greedy stays the exact
+        default, so both values are accepted and equivalent.
+
+        ``kv_block_size``: enable the paged KV pool with this many tokens per
+        block (must divide max_len).  ``kv_blocks``: physical blocks in the
+        pool (default: the dense equivalent, slots * max_len / block_size —
+        pass less to actually cap KV memory).  ``prefix_cache``: share
+        same-prefix KV blocks across requests via the radix tree; requires
+        every layer to be a full-attention layer (block-sharable state) and
+        silently disables itself otherwise."""
+        del greedy                      # superseded by per-request sampling
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        if not greedy:
-            raise NotImplementedError(
-                "non-greedy sampling is not implemented yet (ROADMAP item); "
-                "both compiled paths take argmax")
-        self.greedy = greedy
         self.buckets = tuple(sorted(buckets)) if buckets \
             else prefill_buckets(max_len, min_bucket)
         if self.buckets[-1] > max_len:
@@ -198,32 +270,97 @@ class ServeEngine:
         # decode lower as separate jitted functions)
         self.prefill_model = prefill_model or model
         self.decode_model = decode_model or model
-        self.states = model.init_states(slots, max_len)
+        # ------------------------------------------------- paged KV pool
+        self.kv: PagedKVManager | None = None
+        self._state_kw: dict = {}
+        if kv_block_size is not None:
+            blocks_per_slot = -(-max_len // kv_block_size)
+            if kv_blocks is None:
+                kv_blocks = slots * blocks_per_slot
+            if kv_blocks < blocks_per_slot:
+                # a pool smaller than one request's worst case could never
+                # admit a long prompt: admission would requeue it forever on
+                # an otherwise idle engine
+                raise ValueError(
+                    f"kv_blocks {kv_blocks} < max_len/kv_block_size "
+                    f"{blocks_per_slot}: the pool must cover at least one "
+                    f"request's worst case")
+            # prefix reuse needs every layer's per-token state to live in
+            # sharable blocks: full-attention stacks only (window rings and
+            # recurrent states are not block-addressable)
+            kinds = tuple(model.pattern) + tuple(model.tail_kinds)
+            prefix_ok = bool(kinds) and all(k == "attn" for k in kinds)
+            self.kv = PagedKVManager(
+                slots=slots, max_len=max_len, block_size=kv_block_size,
+                num_blocks=kv_blocks,
+                prefix_cache=prefix_cache and prefix_ok)
+            self._state_kw = dict(kv_block_size=kv_block_size,
+                                  kv_blocks=kv_blocks)
+        self.states = model.init_states(slots, max_len, **self._state_kw)
         self.memory = None
         self.requests: list[Request | None] = [None] * slots
         self.positions = np.zeros(slots, np.int32)
+        # per-slot sampling knobs, applied inside the jitted programs
+        self.samp_temp = np.zeros(slots, np.float32)
+        self.samp_topk = np.zeros(slots, np.int32)
+        self.samp_topp = np.ones(slots, np.float32)
+        self.samp_seed = np.zeros(slots, np.int32)
         # donate the pool state: every program updates slots in place instead
         # of copying the whole pool each call
-        self._decode = jax.jit(self.decode_model.decode_step,
-                               donate_argnums=(2,))
+        self._decode = jax.jit(self._decode_and_sample, donate_argnums=(2,))
         self._prefill = jax.jit(self._prefill_and_splice,
                                 donate_argnums=(4,))
         self._chunk = jax.jit(self._chunk_and_splice, donate_argnums=(5,))
+        self._copy = jax.jit(self._copy_blocks, donate_argnums=(0,)) \
+            if self.kv is not None else None
         self._queue: deque[Request] = deque()
         self._prefilling: dict[int, int] = {}   # slot -> prompt tokens consumed
+        # decode-tick device caches: the full block table and sampling arrays
+        # change only on admission/extension/retirement, not every tick
+        self._bt_cache = None
+        self._bt_version = -1
+        self._samp_cache = None
         self.stats = EngineStats()
+        self._init_kv_stats()
+
+    def _init_kv_stats(self) -> None:
+        if self.kv is not None:
+            self.stats.kv_pool_blocks = self.kv.pool.num_blocks
+            self.stats.kv_block_size = self.kv.block_size
 
     def reset_stats(self) -> None:
         self.stats = EngineStats()
+        if self.kv is not None:
+            self.kv.reset_stats()
+        self._init_kv_stats()
         self._sync_compile_stats()
+        self._sync_kv_stats()
 
     def _sync_compile_stats(self) -> None:
         # _cache_size is a private jit attribute; degrade stats (not serving)
         # if a JAX upgrade drops it
         def size(fn):
+            if fn is None:
+                return 0
             return getattr(fn, "_cache_size", lambda: 0)()
-        self.stats.prefill_compiles = size(self._prefill) + size(self._chunk)
+        self.stats.prefill_compiles = size(self._prefill) \
+            + size(self._chunk) + size(self._copy)
         self.stats.decode_compiles = size(self._decode)
+
+    def _sync_kv_stats(self) -> None:
+        if self.kv is None:
+            return
+        st, mgr = self.stats, self.kv
+        st.kv_blocks_in_use = mgr.in_use
+        # the pool tracks its high-water mark at alloc/retain time, so the
+        # peak sees blocks that were allocated and released within one tick
+        st.kv_blocks_peak = max(st.kv_blocks_peak, mgr.pool.peak_in_use)
+        st.kv_blocks_cached = mgr.cached
+        st.prefix_queries = mgr.stats.prefix_queries
+        st.prefix_hits = mgr.stats.prefix_hits
+        st.prefix_tokens_reused = mgr.stats.prefix_tokens_reused
+        st.blocks_copied = mgr.stats.blocks_copied
+        st.blocks_evicted = mgr.blocks_evicted
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
@@ -237,8 +374,41 @@ class ServeEngine:
             # decode write would land past the last slot and be dropped
             raise ValueError(f"prompt length {len(req.prompt)} leaves no "
                              f"cache room to decode (max_len {self.max_len})")
+        if req.temperature < 0:
+            raise ValueError("temperature must be >= 0 (0 = greedy)")
+        if not 0 < req.top_p <= 1:
+            raise ValueError("top_p must be in (0, 1]")
+        if req.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 = no top-k filter)")
         req.t_submit = time.perf_counter()
         self._queue.append(req)
+
+    def _set_sampling(self, slot: int, req: Request) -> None:
+        self.samp_temp[slot] = req.temperature
+        self.samp_topk[slot] = req.top_k
+        self.samp_topp[slot] = req.top_p
+        self.samp_seed[slot] = req.seed if req.seed is not None \
+            else req.rid & 0x7FFFFFFF
+        self._samp_cache = None
+
+    def _decode_args(self):
+        """Cached device copies of the full block table + per-slot sampling
+        arrays — rebuilt only when admission/extension/retirement touched
+        them, not on every decode tick."""
+        if self.kv is None:
+            bt = None
+        else:
+            if self._bt_cache is None or self._bt_version != self.kv.version:
+                self._bt_cache = jnp.asarray(
+                    np.asarray(self.kv.table, np.int32))
+                self._bt_version = self.kv.version
+            bt = self._bt_cache
+        if self._samp_cache is None:
+            self._samp_cache = (jnp.asarray(self.samp_temp),
+                                jnp.asarray(self.samp_topk),
+                                jnp.asarray(self.samp_topp),
+                                jnp.asarray(self.samp_seed))
+        return bt, self._samp_cache
 
     def _admit(self, budget: int) -> int:
         free = [s for s in range(self.slots) if self.requests[s] is None]
@@ -246,14 +416,30 @@ class ServeEngine:
         if take <= 0:
             return 0
         groups: dict[int, list[tuple[int, Request]]] = {}
-        for _ in range(take):
-            req = self._queue.popleft()
-            slot = free.pop(0)
+        admitted = 0
+        while admitted < take:
+            req = self._queue[0]
+            slot = free[0]
+            matched = 0
+            if self.kv is not None:
+                plan = self.kv.admit(slot, req.prompt)
+                if plan is None:
+                    # pool can't cover the prompt yet: keep FIFO order and
+                    # retry next tick (decode frees blocks as requests end)
+                    break
+                matched = plan.matched_tokens
+                if plan.copy is not None:
+                    self._run_copy(*plan.copy)
+            self._queue.popleft()
+            free.pop(0)
             self.requests[slot] = req
-            if len(req.prompt) > self.buckets[-1]:
-                # long prompt: chunked path — first chunk runs this tick,
-                # the rest advance one per tick interleaved with decode
-                self._prefilling[slot] = 0
+            self._set_sampling(slot, req)
+            admitted += 1
+            if matched > 0 or len(req.prompt) > self.buckets[-1]:
+                # chunked path: long prompts, and prefix-cache hits of any
+                # length — the hit resumes prefill at offset=matched through
+                # the same chunk-continuation program
+                self._prefilling[slot] = matched
                 self._advance_chunk(slot)
             else:
                 b = bucket_for(len(req.prompt), self.buckets)
@@ -262,36 +448,111 @@ class ServeEngine:
             members = groups[b]
             for i in range(0, len(members), self.max_prefill_batch):
                 self._prefill_group(b, members[i:i + self.max_prefill_batch])
-        return take
+        self._sync_kv_stats()
+        return admitted
+
+    # ------------------------------------------------------ compiled programs
+    def _decode_and_sample(self, params, tokens, pool_states, positions,
+                           memory, active, block_table, temp, topk, topp,
+                           seed):
+        """The decode program: one lockstep step over the slot pool + in-jit
+        per-slot sampling of the next token (greedy rows take exact argmax)."""
+        logits, states = self.decode_model.decode_step(
+            params, tokens, pool_states, positions, memory, active,
+            block_table)
+        nxt = sample_tokens(logits[:, 0], temp, topk, topp, seed,
+                            positions + 1)
+        return nxt, states
 
     def _prefill_and_splice(self, params, tokens, lengths, slot_ids,
-                            pool_states):
+                            pool_states, block_tables, temp, topk, topp,
+                            seed):
         """One compiled program per (batch-bucket, bucket) shape: padded
         (N, bucket) prefill, splice each row into the pool at ``slot_ids[i]``,
         return the N first sampled tokens.  Padding rows (group smaller than
         the batch bucket) carry slot_ids[0]; rows splice in REVERSE order so
-        the real row that shares a padding row's target lands last and wins."""
+        the real row that shares a padding row's target lands last and wins.
+        In paged mode the padding rows' block-table entries are the sentinel,
+        so their KV writes drop instead."""
         n = tokens.shape[0]
-        states_n = self.prefill_model.init_states(n, self.max_len)
+        states_n = self.prefill_model.init_states(n, self.max_len,
+                                                  **self._state_kw)
+        if self.kv is not None:
+            states_n = _adopt_pool_kv(states_n, pool_states)
         logits, states_n, _ = self.prefill_model.prefill(
-            params, tokens, states_n, length=lengths)
+            params, tokens, states_n, length=lengths,
+            block_table=block_tables)
         for i in reversed(range(n)):
             row = _state_row(states_n, i)
             pool_states = _splice_states(pool_states, row, slot_ids[i])
-        return jnp.argmax(logits[:, 0], axis=-1), pool_states
+        first = sample_tokens(logits[:, 0], temp, topk, topp, seed, lengths)
+        return first, pool_states
 
     def _chunk_and_splice(self, params, tokens, offset, length, slot,
-                          pool_states):
-        """One compiled program for every chunk of every long prompt: gather
-        the slot's state, resume prefill at ``offset`` with the (1, C) chunk,
-        splice back, return the sampled token (meaningful on the final chunk
-        only)."""
+                          pool_states, block_table, temp, topk, topp, seed):
+        """One compiled program for every chunk of every long prompt (and for
+        every prefix-cache-hit suffix): gather the slot's state, resume
+        prefill at ``offset`` with the (1, C) chunk, splice back, return the
+        sampled token (meaningful on the final chunk only)."""
         row = _gather_slot(pool_states, slot)
         logits, row, _ = self.prefill_model.prefill(
-            params, tokens, row, length=length[None], offset=offset[None])
+            params, tokens, row, length=length[None], offset=offset[None],
+            block_table=block_table)
         pool = _splice_states(pool_states, row, slot)
-        return jnp.argmax(logits[0, -1]), pool
+        tok = sample_tokens(logits[:, -1], temp, topk, topp, seed,
+                            (offset + length)[None])
+        return tok[0], pool
 
+    def _copy_blocks(self, pool_states, src, dst):
+        """Clone physical block ``src`` into ``dst`` across every paged
+        layer — the copy-on-write step for a partial-block prefix hit."""
+        def tail_copy(x):
+            if isinstance(x, PagedKVCache):
+                return x._replace(k=x.k.at[dst].set(x.k[src]),
+                                  v=x.v.at[dst].set(x.v[src]))
+            return x
+
+        def group_copy(x):
+            if isinstance(x, PagedKVCache):
+                return x._replace(k=x.k.at[:, dst].set(x.k[:, src]),
+                                  v=x.v.at[:, dst].set(x.v[:, src]))
+            return x
+
+        return {"groups": jax.tree.map(group_copy, pool_states["groups"],
+                                       is_leaf=_is_paged),
+                "tail": jax.tree.map(tail_copy, pool_states["tail"],
+                                     is_leaf=_is_paged)}
+
+    def _run_copy(self, src: int, dst: int) -> None:
+        self.states = self._copy(self.states, jnp.asarray(src, jnp.int32),
+                                 jnp.asarray(dst, jnp.int32))
+
+    # -------------------------------------------------------- host-side args
+    def _tables_for(self, slot_ids: list[int], rows: int) -> jax.Array | None:
+        """(rows, blocks_per_slot) block-table rows for the given slots;
+        padding rows (beyond ``slot_ids``) are all-sentinel so the compiled
+        program drops their writes."""
+        if self.kv is None:
+            return None
+        bt = np.full((rows, self.kv.blocks_per_slot), self.kv.sentinel,
+                     np.int32)
+        for i, s in enumerate(slot_ids):
+            bt[i] = self.kv.table[s]
+        return jnp.asarray(bt)
+
+    def _samp_rows(self, slot_ids: list[int], rows: int):
+        t = np.zeros(rows, np.float32)
+        k = np.zeros(rows, np.int32)
+        p = np.ones(rows, np.float32)
+        s = np.zeros(rows, np.int32)
+        for i, sl in enumerate(slot_ids):
+            t[i] = self.samp_temp[sl]
+            k[i] = self.samp_topk[sl]
+            p[i] = self.samp_topp[sl]
+            s[i] = self.samp_seed[sl]
+        return jnp.asarray(t), jnp.asarray(k), jnp.asarray(p), jnp.asarray(s)
+
+    # -------------------------------------------------------------- prefill
     def _prefill_group(self, bucket: int, members: list) -> None:
         n = len(members)
         nb = bucket_for(n, self.batch_buckets)
@@ -302,10 +563,13 @@ class ServeEngine:
             toks[i, :len(req.prompt)] = req.prompt
             lens[i] = len(req.prompt)
             slot_ids[i] = slot
+        slots_real = [slot for slot, _ in members]
+        bt = self._tables_for(slots_real, nb)
+        samp = self._samp_rows(slots_real, nb)
         t0 = time.perf_counter()
         first, self.states = self._prefill(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
-            jnp.asarray(slot_ids), self.states)
+            jnp.asarray(slot_ids), self.states, bt, *samp)
         first = np.asarray(first)            # blocks until the result is ready
         now = time.perf_counter()
         st = self.stats
@@ -319,9 +583,12 @@ class ServeEngine:
             req.t_first_token = now
             st.prefills += 1
             st.prefill_prompt_tokens += len(req.prompt)
+            st.prefill_tokens_computed += len(req.prompt)
             st.prefill_padded_tokens += bucket
             st.record_ttft(now - req.t_submit)
             st.bucket_counts[bucket] = st.bucket_counts.get(bucket, 0) + 1
+            if self.kv is not None:
+                self.kv.publish(slot, req.prompt)
             if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
                 self._finish(slot, now)
 
@@ -333,14 +600,17 @@ class ServeEngine:
         n = len(piece)
         toks = np.zeros((1, c), np.int32)
         toks[0, :n] = piece
+        bt = self._tables_for([slot], 1)
+        samp = self._samp_rows([slot], 1)
         t0 = time.perf_counter()
         tok, self.states = self._chunk(
             self.params, jnp.asarray(toks), jnp.asarray(off, jnp.int32),
             jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
-            self.states)
+            self.states, bt, *samp)
         st = self.stats
         st.prefill_chunks += 1
         st.prefill_padded_tokens += c
+        st.prefill_tokens_computed += n
         if off + n < len(req.prompt):
             # intermediate chunk: don't block on the (unused) token — let the
             # dispatch overlap with this tick's decode step
@@ -358,6 +628,8 @@ class ServeEngine:
         st.prefills_chunked += 1
         st.prefill_prompt_tokens += len(req.prompt)
         st.record_ttft(now - req.t_submit)
+        if self.kv is not None:
+            self.kv.publish(slot, req.prompt)
         if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
             self._finish(slot, now)
 
@@ -367,6 +639,13 @@ class ServeEngine:
         req.aborted = False
         req.t_done = now
         self.requests[slot] = None
+        if self.kv is not None:
+            # same-tick reclamation: publish the finished sequence for future
+            # prefix hits, then release every block the slot held.  The LAST
+            # generated token was sampled but never fed back through decode,
+            # so its KV was never written — publish only the written prefix
+            # or a block-aligned sequence would share a garbage position.
+            self.kv.finish(slot, req.prompt + req.generated[:-1])
         self.stats.requests_completed += 1
         self.stats.tokens_generated += len(req.generated)
 
@@ -374,48 +653,98 @@ class ServeEngine:
     def warmup(self) -> None:
         """Pre-compile every program the engine can ever run — all
         (batch-bucket, bucket) prefill shapes, the chunk-continuation program
-        (when any admissible prompt is longer than the largest bucket), and
-        the decode program — then reset the pool.  After this, any trace
+        (when any admissible prompt is longer than the largest bucket, or a
+        prefix cache can shortcut into it), the block-clone program (paged),
+        and the decode program — then reset the pool.  After this, any trace
         triggers zero recompiles regardless of arrival pattern."""
         if self._queue or self._prefilling \
                 or any(r is not None for r in self.requests):
             raise RuntimeError("warmup() requires an idle engine")
+        zs = lambda n: (jnp.zeros((n,), jnp.float32),
+                        jnp.zeros((n,), jnp.int32),
+                        jnp.ones((n,), jnp.float32),
+                        jnp.zeros((n,), jnp.int32))
         for b in self.buckets:
             for nb in self.batch_buckets:
                 _, self.states = self._prefill(
                     self.params, jnp.zeros((nb, b), jnp.int32),
                     jnp.ones((nb,), jnp.int32),
                     jnp.asarray(np.arange(nb) % self.slots, np.int32),
-                    self.states)
-        if self.max_len - 1 > self.buckets[-1]:
+                    self.states, self._warm_table(nb), *zs(nb))
+        # chunk continuation: reachable for prompts beyond the largest bucket,
+        # and (paged) for any prefix-cache hit
+        if self.max_len - 1 > self.buckets[-1] \
+                or (self.kv is not None and self.kv.prefix_enabled):
             _, self.states = self._chunk(
                 self.params, jnp.zeros((1, self.prefill_chunk), jnp.int32),
                 jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32),
-                jnp.asarray(0, jnp.int32), self.states)
+                jnp.asarray(0, jnp.int32), self.states,
+                self._warm_table(1), *zs(1))
+        if self._copy is not None:
+            self.states = self._copy(self.states, jnp.asarray(0, jnp.int32),
+                                     jnp.asarray(0, jnp.int32))
         _, self.states = self._decode(
             self.params, jnp.zeros((self.slots, 1), jnp.int32), self.states,
             jnp.asarray(self.positions), self.memory,
-            jnp.zeros((self.slots,), bool))
-        self.states = self.model.init_states(self.slots, self.max_len)
+            jnp.zeros((self.slots,), bool), self._warm_table(self.slots),
+            *zs(self.slots))
+        self.states = self.model.init_states(self.slots, self.max_len,
+                                             **self._state_kw)
+        if self.kv is not None:
+            # the device pool was just re-zeroed: drop every cached prefix
+            # that described its old contents
+            self.kv.clear()
         self.positions[:] = 0
         self._sync_compile_stats()
+
+    def _warm_table(self, rows: int) -> jax.Array | None:
+        """All-sentinel block tables: warmup calls drop every KV write."""
+        if self.kv is None:
+            return None
+        return jnp.full((rows, self.kv.blocks_per_slot), self.kv.sentinel,
+                        jnp.int32)
 
     # ---------------------------------------------------------------- decode
     def step(self) -> None:
         """One engine tick: advance each in-flight chunked prefill by one
         chunk, admit up to ``max_prefill_per_step`` queued requests, then
         advance every decoding slot by one lockstep decode step (dead and
-        mid-prefill slots are frozen by the ``active`` mask)."""
+        mid-prefill slots are frozen by the ``active`` mask).  Paged engines
+        extend each slot's block table before the write and stall (freeze) a
+        slot for the tick when the pool has no block for it."""
         t_tick = time.perf_counter()
         for slot in list(self._prefilling):
             self._advance_chunk(slot)
         self._admit(self.max_prefill_per_step)
         busy = [i for i, r in enumerate(self.requests) if r is not None]
         active = [i for i in busy if i not in self._prefilling]
+        if self.kv is not None and active:
+            ok = []
+            for i in active:
+                # the write this tick lands at position[i]: the table must
+                # cover position[i] + 1 tokens
+                if self.kv.extend(i, int(self.positions[i]) + 1):
+                    ok.append(i)
+                else:
+                    self.stats.decode_stalls += 1
+            if not ok and not self._prefilling:
+                # nothing can decode and nothing mid-prefill will retire:
+                # no block can ever free — fail loudly instead of spinning
+                raise RuntimeError(
+                    f"KV pool exhausted: {self.kv.in_use} of "
+                    f"{self.kv.pool.num_blocks} blocks referenced, every "
+                    f"active slot stalled and nothing can retire — size the "
+                    f"pool for at least one request's worst case "
+                    f"(kv_blocks >= max_len / kv_block_size)")
+            active = ok
         self.stats.ticks += 1
         self.stats.occupancy_sum += len(busy) / self.slots
         if not active:
             self._sync_compile_stats()
+            self._sync_kv_stats()
+            self.stats.kv_occupancy_sum += (
+                self.kv.in_use / self.kv.pool.num_blocks
+                if self.kv is not None else 0.0)
             self.stats.wall_time_s += time.perf_counter() - t_tick
             return
         toks = np.zeros((self.slots, 1), np.int32)
@@ -424,11 +753,13 @@ class ServeEngine:
             mask[i] = True
             toks[i, 0] = self.requests[i].generated[-1] \
                 if self.requests[i].generated else self.requests[i].prompt[-1]
+        bt, samp = self._decode_args()
         t0 = time.perf_counter()
-        logits, self.states = self._decode(
+        nxt, self.states = self._decode(
             self.params, jnp.asarray(toks), self.states,
-            jnp.asarray(self.positions), self.memory, jnp.asarray(mask))
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            jnp.asarray(self.positions), self.memory, jnp.asarray(mask), bt,
+            *samp)
+        nxt = np.asarray(nxt, np.int32)
         now = time.perf_counter()
         self.stats.decode_steps += 1
         self.stats.decode_time_s += now - t0
@@ -441,6 +772,10 @@ class ServeEngine:
                     or self.positions[i] >= self.max_len - 1):
                 self._finish(i, now)
         self._sync_compile_stats()
+        self._sync_kv_stats()
+        self.stats.kv_occupancy_sum += (
+            self.kv.in_use / self.kv.pool.num_blocks
+            if self.kv is not None else 0.0)
         # wall time accumulates per tick so tokens_per_s stays meaningful for
         # callers driving submit()+step() directly instead of run()
         self.stats.wall_time_s += time.perf_counter() - t_tick
@@ -485,35 +820,74 @@ class ServeEngine:
 
 
 # --------------------------------------------------------- state pool surgery
+def _is_paged(x) -> bool:
+    return isinstance(x, PagedKVCache)
+
+
+def _adopt_pool_kv(fresh, pool):
+    """Swap the paged-KV leaves of a freshly initialized batch-N state tree
+    for the live pool's (the block arrays are global — the fresh zeros are
+    dead code the compiler drops); everything else keeps its fresh batch-N
+    leaves.  ``fresh.length`` (zeros) is kept: prefill rows start empty."""
+    def pick(f, p):
+        if _is_paged(f):
+            return PagedKVCache(p.k, p.v, f.length)
+        return f
+    return jax.tree.map(pick, fresh, pool, is_leaf=_is_paged)
+
+
 def _state_row(states, i: int):
     """Batch-1 view of row ``i`` (a static index) of a batch-N state tree.
     Batch is the first axis for tail states, the second for stacked
-    (scan-group) states."""
-    return {"groups": jax.tree.map(lambda a: a[:, i:i + 1], states["groups"]),
-            "tail": jax.tree.map(lambda a: a[i:i + 1], states["tail"])}
+    (scan-group) states.  Paged KV leaves have no batch axis on k/v (they're
+    the global pool) — only their per-slot ``length`` is sliced."""
+    def grp(a):
+        return a._replace(length=a.length[:, i:i + 1]) if _is_paged(a) \
+            else a[:, i:i + 1]
+
+    def tail(a):
+        return a._replace(length=a.length[i:i + 1]) if _is_paged(a) \
+            else a[i:i + 1]
+
+    return {"groups": jax.tree.map(grp, states["groups"], is_leaf=_is_paged),
+            "tail": jax.tree.map(tail, states["tail"], is_leaf=_is_paged)}
 
 
 def _gather_slot(pool_states, slot):
     """Batch-1 copy of slot ``slot`` (may be a traced scalar) of the pool."""
 
     def tail(a):
+        if _is_paged(a):
+            return a._replace(
+                length=jax.lax.dynamic_slice(a.length, (slot,), (1,)))
         return jax.lax.dynamic_slice(
             a, (slot,) + (0,) * (a.ndim - 1), (1,) + a.shape[1:])
 
     def grp(a):
+        if _is_paged(a):
+            return a._replace(length=jax.lax.dynamic_slice(
+                a.length, (0, slot), (a.length.shape[0], 1)))
         return jax.lax.dynamic_slice(
-            a, (0, slot) + (0,) * (a.ndim - 2), (a.shape[0], 1) + a.shape[2:])
+            a, (0, slot) + (0,) * (a.ndim - 2),
+            (a.shape[0], 1) + a.shape[2:])
 
-    return {"groups": jax.tree.map(grp, pool_states["groups"]),
-            "tail": jax.tree.map(tail, pool_states["tail"])}
+    return {"groups": jax.tree.map(grp, pool_states["groups"],
+                                   is_leaf=_is_paged),
+            "tail": jax.tree.map(tail, pool_states["tail"],
+                                 is_leaf=_is_paged)}
 
 
 def _splice_states(pool_states, one_states, slot):
     """Write batch-1 `one_states` into slot `slot` of the pooled states.
     Batch is the first axis for tail states and the second for stacked
-    (scan-group) states.  ``slot`` may be a traced scalar."""
+    (scan-group) states.  ``slot`` may be a traced scalar.  Paged KV leaves
+    carry the updated global pool in k/v (taken wholesale) and a per-slot
+    length (spliced)."""
 
     def splice(pool, new):
+        if _is_paged(pool):
+            return PagedKVCache(new.k, new.v, jax.lax.dynamic_update_slice(
+                pool.length, new.length.astype(pool.length.dtype), (slot,)))
         if pool.ndim == new.ndim:          # tail state: batch axis 0
             return jax.lax.dynamic_update_slice(
                 pool, new.astype(pool.dtype),
@@ -521,12 +895,16 @@ def _splice_states(pool_states, one_states, slot):
         raise ValueError((pool.shape, new.shape))
 
     def splice_stacked(pool, new):
+        if _is_paged(pool):
+            return PagedKVCache(new.k, new.v, jax.lax.dynamic_update_slice(
+                pool.length, new.length.astype(pool.length.dtype), (0, slot)))
         # pool: (G, B, ...), new: (G, 1, ...)
         return jax.lax.dynamic_update_slice(
             pool, new.astype(pool.dtype),
             (0, slot) + (0,) * (pool.ndim - 2))
 
     out_groups = jax.tree.map(splice_stacked, pool_states["groups"],
-                              one_states["groups"])
-    out_tail = jax.tree.map(splice, pool_states["tail"], one_states["tail"])
+                              one_states["groups"], is_leaf=_is_paged)
+    out_tail = jax.tree.map(splice, pool_states["tail"], one_states["tail"],
+                            is_leaf=_is_paged)
     return {"groups": out_groups, "tail": out_tail}

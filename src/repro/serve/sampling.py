@@ -1,0 +1,73 @@
+"""Token sampling for the jitted serving programs.
+
+Per-request temperature / top-k / top-p, applied *inside* the compiled
+decode/prefill programs: every parameter is a traced per-row array, so one
+program serves any mix of greedy and stochastic requests with zero
+recompiles.  Greedy rows (temperature <= 0) take the exact ``argmax`` of the
+raw logits — bit-for-bit what the engine produced before sampling existed.
+
+Randomness is stateless: each row's key is ``fold_in(PRNGKey(seed),
+position)``, so a request's token stream is a pure function of (seed,
+positions) — reproducible across engines, restarts, and slot assignments,
+with no carried key state in the slot pool.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: filler for masked-out logits; finite so (masked - max) never yields NaN
+_MASKED = -1e30
+
+
+def _sample_row(logits: jax.Array, temperature: jax.Array, top_k: jax.Array,
+                top_p: jax.Array, seed: jax.Array, position: jax.Array
+                ) -> jax.Array:
+    """One row: logits (V,) fp32, scalar knobs -> sampled token id."""
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)
+    # top-k: drop logits below the k-th largest (k <= 0 keeps everything;
+    # ties at the threshold stay in, matching the usual >=-threshold rule)
+    sorted_desc = jnp.sort(scaled)[::-1]
+    kth = sorted_desc[jnp.clip(top_k, 1, v) - 1]
+    keep_k = (top_k <= 0) | (scaled >= kth)
+    scaled = jnp.where(keep_k, scaled, _MASKED)
+    # top-p (nucleus): keep the smallest set of tokens whose cumulative
+    # probability reaches top_p — a token stays while the mass *before* it
+    # (exclusive cumsum in descending-probability order) is < top_p, so the
+    # top-1 token always survives and p >= 1 keeps everything
+    sorted_desc = jnp.sort(scaled)[::-1]
+    order = jnp.argsort(-scaled)
+    probs = jax.nn.softmax(sorted_desc)
+    cum_before = jnp.cumsum(probs) - probs
+    keep_sorted = cum_before < jnp.maximum(top_p, 1e-6)
+    keep_p = jnp.zeros((v,), bool).at[order].set(keep_sorted)
+    scaled = jnp.where(keep_p, scaled, _MASKED)
+
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), position)
+    sampled = jax.random.categorical(key, scaled)
+    return jnp.where(temperature > 0.0, sampled, greedy).astype(jnp.int32)
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array, seed: jax.Array,
+                  position: jax.Array) -> jax.Array:
+    """Batched sampling: logits (B,V) fp32; temperature/top_p (B,) f32;
+    top_k/seed/position (B,) int32 -> (B,) int32 token ids.
+
+    Rows with temperature <= 0 are exactly ``argmax(logits, -1)``.  The
+    all-greedy case (the default) skips the sort/cumsum machinery entirely at
+    runtime via ``lax.cond`` — one compiled program either way, so the
+    engine's zero-recompile invariant holds for any greedy/stochastic mix."""
+    logits = logits.astype(jnp.float32)
+
+    def stochastic(_):
+        return jax.vmap(_sample_row)(logits, temperature, top_k, top_p,
+                                     seed, position)
+
+    def greedy(_):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return jax.lax.cond(jnp.any(temperature > 0.0), stochastic, greedy, None)

@@ -11,6 +11,8 @@ import pytest
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.jacquard_gemv import jacquard_gemv, jacquard_gemv_ref
+from repro.kernels.paged_attention import (paged_decode_attention,
+                                           paged_decode_attention_ref)
 from repro.kernels.pascal_matmul import pascal_matmul, pascal_matmul_ref
 from repro.kernels.pavlov_lstm import pavlov_lstm, pavlov_lstm_ref
 from repro.kernels.pavlov_rglru import pavlov_rglru, pavlov_rglru_ref
@@ -214,3 +216,74 @@ def test_flash_kernel_property(seed):
     out = flash_attention(q, k, v, causal=True, block_q=16, block_kv=16)
     ref = flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------- paged_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h,kvh,hd,n,bs,nb", [
+    (4, 4, 16, 8, 8, 4),
+    (4, 2, 16, 10, 8, 4),               # GQA
+    (8, 1, 8, 6, 16, 2),                # MQA
+    (2, 2, 32, 12, 4, 8),               # many small blocks
+])
+def test_paged_decode_kernel(dtype, h, kvh, hd, n, bs, nb):
+    """Block-table gather kernel vs the pure-jnp paged reference: scattered
+    pools, ragged per-slot lengths, sentinel (unallocated) table entries."""
+    B = 3
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    q = _rand(ks[0], B, 1, h, hd, dtype=dtype)
+    nk = _rand(ks[1], B, 1, kvh, hd, dtype=dtype)
+    nv = _rand(ks[2], B, 1, kvh, hd, dtype=dtype)
+    kp = _rand(ks[3], n, bs, kvh, hd, dtype=dtype)
+    vp = _rand(ks[4], n, bs, kvh, hd, dtype=dtype)
+    rng = np.random.RandomState(7)
+    # distinct physical blocks per slot, rest sentinel (= n, "no block")
+    perm = rng.permutation(n)
+    table = np.full((B, nb), n, np.int32)
+    lengths = np.zeros((B,), np.int32)
+    off = 0
+    for b in range(B):
+        owned = rng.randint(1, nb + 1)
+        owned = min(owned, n - off)
+        table[b, :owned] = perm[off:off + owned]
+        off += owned
+        lengths[b] = rng.randint(0, owned * bs)   # write pos inside coverage
+    out, k2, v2 = paged_decode_attention(q, nk, nv, kp, vp,
+                                         jnp.asarray(table),
+                                         jnp.asarray(lengths))
+    outr, k2r, v2r = paged_decode_attention_ref(q, nk, nv, kp, vp,
+                                                jnp.asarray(table),
+                                                jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(k2r))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v2r))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(outr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_paged_decode_kernel_property(seed):
+    rng = random.Random(3000 + seed)
+    h, kvh = rng.choice([(4, 4), (4, 2), (8, 1)])
+    hd = rng.choice([8, 16])
+    bs = rng.choice([4, 8])
+    nb = rng.choice([2, 4])
+    B = rng.choice([1, 2, 4])
+    n = B * nb + rng.choice([0, 3])
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = _rand(ks[0], B, 1, h, hd)
+    nk = _rand(ks[1], B, 1, kvh, hd)
+    nv = _rand(ks[2], B, 1, kvh, hd)
+    kp = _rand(ks[3], n, bs, kvh, hd)
+    vp = _rand(ks[4], n, bs, kvh, hd)
+    nrng = np.random.RandomState(seed)
+    table = nrng.permutation(n)[:B * nb].reshape(B, nb).astype(np.int32)
+    lengths = nrng.randint(0, nb * bs, size=B).astype(np.int32)
+    out, k2, v2 = paged_decode_attention(q, nk, nv, kp, vp,
+                                         jnp.asarray(table),
+                                         jnp.asarray(lengths))
+    outr, k2r, v2r = paged_decode_attention_ref(q, nk, nv, kp, vp,
+                                                jnp.asarray(table),
+                                                jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(k2r))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
+                               atol=1e-4, rtol=1e-4)

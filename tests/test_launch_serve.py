@@ -22,6 +22,25 @@ def test_build_engine_passes_knobs_through():
     assert engine.max_prefill_per_step == 2
     assert engine.max_prefill_batch == 2
     assert engine.slots == 3 and engine.max_len == 128
+    assert engine.kv is None                    # dense KV by default
+
+
+def test_build_engine_passes_paged_kv_knobs_through():
+    cfg = reduced_config("qwen3-0.6b")
+    cfg = cfg.replace(num_layers=len(cfg.block_pattern))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = serve_mod.build_engine(
+        cfg, params, slots=2, max_len=64, kv_block_size=16, kv_blocks=6,
+        prefix_cache=False)
+    assert engine.kv is not None
+    assert engine.kv.block_size == 16
+    assert engine.kv.pool.num_blocks == 6
+    assert not engine.kv.prefix_enabled
+    engine = serve_mod.build_engine(cfg, params, slots=2, max_len=64,
+                                    kv_block_size=16)
+    assert engine.kv.pool.num_blocks == 2 * 64 // 16   # dense equivalent
+    assert engine.kv.prefix_enabled                    # pure-attention stack
 
 
 def test_cli_flags_reach_engine(monkeypatch):
@@ -46,6 +65,7 @@ def test_cli_flags_reach_engine(monkeypatch):
 
         def run(self, reqs):
             captured["n_requests"] = len(reqs)
+            captured["reqs"] = reqs
             return reqs
 
     monkeypatch.setattr(serve_mod, "ServeEngine", StubEngine)
@@ -53,6 +73,9 @@ def test_cli_flags_reach_engine(monkeypatch):
                     "--slots", "2", "--max-len", "128", "--max-bucket", "32",
                     "--max-prefill-per-step", "3", "--max-prefill-batch", "2",
                     "--prefill-chunk", "16", "--long-prompts", "1",
+                    "--kv-block-size", "16", "--kv-blocks", "12",
+                    "--no-prefix-cache", "--temperature", "0.7",
+                    "--top-k", "5", "--top-p", "0.9",
                     "--warmup"])
     assert captured["slots"] == 2
     assert captured["max_len"] == 128
@@ -60,8 +83,14 @@ def test_cli_flags_reach_engine(monkeypatch):
     assert captured["max_prefill_per_step"] == 3
     assert captured["max_prefill_batch"] == 2
     assert captured["prefill_chunk"] == 16
+    assert captured["kv_block_size"] == 16
+    assert captured["kv_blocks"] == 12
+    assert captured["prefix_cache"] is False
     assert captured["warmed"] is True
     assert captured["n_requests"] == 4          # 3 short + 1 long
+    # sampling knobs land on every submitted request
+    assert all(r.temperature == 0.7 and r.top_k == 5 and r.top_p == 0.9
+               for r in captured["reqs"])
 
 
 def test_cli_defaults_parse():
@@ -70,3 +99,9 @@ def test_cli_defaults_parse():
     assert args.max_prefill_batch == 4
     assert args.prefill_chunk is None
     assert args.max_bucket is None
+    assert args.kv_block_size is None           # dense KV by default
+    assert args.kv_blocks is None
+    assert args.prefix_cache is True
+    assert args.temperature == 0.0              # greedy by default
+    assert args.top_k == 0
+    assert args.top_p == 1.0

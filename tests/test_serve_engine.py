@@ -57,8 +57,15 @@ def test_submit_rejects_oversized_prompt():
         engine.submit(Request(rid=3, prompt=[]))
     with pytest.raises(ValueError):
         engine.submit(Request(rid=4, prompt=[1, 2], max_new_tokens=0))
-    with pytest.raises(NotImplementedError):
-        ServeEngine(model, params, slots=1, max_len=32, greedy=False)
+    # invalid sampling knobs are rejected at submit
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=5, prompt=[1, 2], temperature=-0.5))
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=6, prompt=[1, 2], top_p=0.0))
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=7, prompt=[1, 2], top_k=-1))
+    # greedy=False no longer raises: sampling is per-request now
+    ServeEngine(model, params, slots=1, max_len=32, greedy=False)
     # max_len - 1 is the longest admissible prompt
     engine.submit(Request(rid=2, prompt=list(range(31))))
 

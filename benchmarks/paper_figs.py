@@ -13,14 +13,13 @@ Fig.12 — inference latency, normalized to Baseline.
 """
 from __future__ import annotations
 
-import math
 import time
 from collections import Counter, defaultdict
 
 from repro.core import (EDGE_TPU, DEFAULT_ENERGY, characterize_model,
                         characterize_zoo, cluster_all, evaluate_zoo,
-                        monolithic_cost, rule_cluster, strict_fraction,
-                        summarize, variation_report)
+                        monolithic_cost, strict_fraction,
+                        summarize)
 from repro.edge import edge_zoo
 
 MB = 1024 * 1024

@@ -5,8 +5,17 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 
 
+def _results_dir(name: str) -> Path:
+    """results/<name>, created on demand — a fresh checkout has no results/
+    tree, and both the globbing readers here and anything redirected into the
+    directory must not depend on a previous run having made it."""
+    d = ROOT / "results" / name
+    d.mkdir(parents=True, exist_ok=True)
+    return d
+
+
 def dryrun_table() -> str:
-    d = ROOT / "results" / "dryrun"
+    d = _results_dir("dryrun")
     rows = []
     for f in sorted(d.glob("*.json")):
         r = json.loads(f.read_text())
@@ -33,7 +42,7 @@ def dryrun_table() -> str:
 
 
 def roofline_table() -> str:
-    d = ROOT / "results" / "roofline"
+    d = _results_dir("roofline")
     out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | dominant | MODEL/HLO flops | roofline frac | lever |",
            "|---|---|---|---|---|---|---|---|---|"]
     levers = {
@@ -61,7 +70,7 @@ def roofline_table() -> str:
 
 
 def perf_variants() -> str:
-    d = ROOT / "results" / "roofline"
+    d = _results_dir("roofline")
     out = ["| cell | variant | compute (ms) | memory (ms) | collective (ms) | roofline frac |",
            "|---|---|---|---|---|---|"]
     for f in sorted(d.glob("*__v*.json")):

@@ -22,7 +22,6 @@ import time
 from pathlib import Path
 
 import jax
-import numpy as np
 
 from repro.configs import ARCHS, SHAPES, applicable, get_config
 from repro.utils.hlo import normalize_cost_analysis, parse_collectives

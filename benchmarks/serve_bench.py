@@ -17,11 +17,22 @@ Gates (all assertions, the acceptance criteria for the serving path):
     prefix-cache hit rate and fewer prefill tokens computed than the same
     trace with the cache off, zero recompiles after warmup with paging on,
     and peak blocks-in-use on a ragged trace strictly under the dense
-    ``slots x max_len`` equivalent — while generating the exact same tokens.
+    ``slots x max_len`` equivalent — while generating the exact same tokens;
+  * multi-device (``--sharded``, needs >= 8 devices — force them on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``): engines sharded
+    over 1-, 2-, and 8-device data-parallel meshes generate tokens identical
+    to the unsharded engine, with zero recompiles after warmup and the paged
+    pool's per-shard accounting summing exactly to the unsharded totals;
+  * regression (``--compare results/serve_bench_baseline.json``): tokens/s
+    must stay within 20% of the committed baseline and no gate metric
+    (recompiles, prefix hit rate, peak blocks, decode stalls) may regress;
+    the diff is written next to ``--json`` for the CI artifact.
 
   PYTHONPATH=src python benchmarks/serve_bench.py
   PYTHONPATH=src python benchmarks/serve_bench.py --arch recurrentgemma-2b \\
       --requests 24 --slots 4 --json results/serve_bench.json
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python benchmarks/serve_bench.py --sharded
 """
 import argparse
 import json
@@ -180,6 +191,146 @@ def paged_shared_prefix_gate(max_new: int = 6) -> dict:
             "recompiles_after_warmup": recompiles}
 
 
+def sharded_serve_gate(max_new: int = 6) -> dict:
+    """Multi-device serving acceptance gate.
+
+    Runs the shared-prefix + ragged paged workload on engines sharded over
+    1-, 2-, and 8-device data-parallel meshes (and a 4x2 tensor-parallel
+    mesh) and asserts, per mesh: (a) generated tokens identical to the
+    unsharded reference engine (hard-gated on the pure-dp meshes, where
+    identity is a structural invariant; recorded informationally on the TP
+    mesh, where collectives reorder reductions), (b) zero prefill/decode
+    recompiles after warmup — the NamedSharding-pinned program inventory is
+    closed, (c) the paged pool's per-shard accounting sums exactly to the
+    unsharded totals (in-use per tick, and the per-shard distribution at
+    the peak summing to the unsharded peak).
+    """
+    import jax
+    from repro.configs import reduced_config
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import build_model
+    from repro.serve.engine import Request, ServeEngine
+
+    ndev = len(jax.devices())
+    assert ndev >= 8, (
+        f"the sharded gate needs >= 8 devices, found {ndev} — on CPU run "
+        f"under XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    cfg = reduced_config("qwen3-0.6b")
+    cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    slots, max_len, bs, kv_blocks = 8, 128, 16, 48
+
+    def trace():
+        rng = np.random.RandomState(13)
+        shared = rng.randint(1, cfg.vocab_size, 40).tolist()
+        out = [Request(rid=i, prompt=shared + rng.randint(
+                   1, cfg.vocab_size, 3 + i).tolist(),
+                   max_new_tokens=max_new) for i in range(8)]
+        out += [Request(rid=100 + i, prompt=rng.randint(
+                    1, cfg.vocab_size, n).tolist(), max_new_tokens=max_new)
+                for i, n in enumerate([5, 23, 47, 78, 90])]  # 78/90: chunked
+        return out
+
+    def run(mesh):
+        eng = ServeEngine(build_model(cfg), params, slots=slots,
+                          max_len=max_len, buckets=(16, 32, 64),
+                          max_prefill_per_step=4, kv_block_size=bs,
+                          kv_blocks=kv_blocks, mesh=mesh)
+        eng.warmup()
+        w = eng.stats.summary()
+        assert w["prefill_compiles"] > 0, "compile counters unavailable"
+        eng.reset_stats()
+        done = eng.run(trace())
+        s = eng.stats.summary()
+        rec = (s["prefill_compiles"] - w["prefill_compiles"]) \
+            + (s["decode_compiles"] - w["decode_compiles"])
+        return [r.generated for r in done], s, rec
+
+    ref_tokens, ref_s, ref_rec = run(None)
+    assert ref_rec == 0, f"{ref_rec} recompiles on the unsharded reference"
+    out = {"devices": ndev, "unsharded_kv": ref_s["kv"], "meshes": {}}
+    for dp, mp in ((1, 1), (2, 1), (8, 1), (4, 2)):
+        tag = f"{dp}x{mp}"
+        toks, s, rec = run(make_serve_mesh(dp, mp))
+        kv = s["kv"]
+        if mp == 1:
+            # bitwise identity is a *pure-dp* invariant (no per-slot
+            # reduction crosses a shard) — hard-gated.  On TP meshes
+            # model-axis collectives reorder reductions, so identity holds
+            # empirically but is recorded, not asserted: a ulp-level argmax
+            # tie after a JAX upgrade is not a serving regression.
+            assert toks == ref_tokens, (
+                f"mesh {tag}: sharded engine diverged from the "
+                f"single-device reference")
+        assert rec == 0, f"mesh {tag}: {rec} recompiles after warmup"
+        shards = kv.get("shards", 1)
+        if shards > 1:
+            assert shards == dp, (tag, kv)
+            # per-shard accounting must mirror the device layout and sum to
+            # the single-device totals: the allocator is mesh-independent
+            assert sum(kv["in_use_per_shard"]) == kv["blocks_in_use"], kv
+            assert sum(kv["peak_per_shard"]) == kv["blocks_peak"], kv
+        assert kv["blocks_peak"] == ref_s["kv"]["blocks_peak"], (kv, ref_s)
+        assert kv["prefix_hit_rate"] == ref_s["kv"]["prefix_hit_rate"]
+        out["meshes"][tag] = {
+            "recompiles_after_warmup": rec,
+            "tokens_identical": toks == ref_tokens,
+            "kv": {k: kv[k] for k in
+                   ("blocks_peak", "prefix_hit_rate", "decode_stalls",
+                    "shards", "in_use_per_shard", "peak_per_shard")
+                   if k in kv},
+            "tokens_per_s": s["tokens_per_s"],
+        }
+    return out
+
+
+# ------------------------------------------------------------ regression gate
+def _report_metrics(report: dict) -> dict:
+    """Flatten the gate metrics a baseline records / a compare run checks."""
+    m = report["measure"]
+    out = {
+        "tokens_per_s": m["tokens_per_s"],
+        "recompiles_after_warmup": report["recompiles_after_warmup"],
+    }
+    kv = report.get("paged_prefix", {}).get("kv")
+    if kv:
+        out.update({"prefix_hit_rate": kv["prefix_hit_rate"],
+                    "blocks_peak": kv["blocks_peak"],
+                    "decode_stalls": kv["decode_stalls"]})
+    return out
+
+
+def compare_to_baseline(report: dict, baseline: dict,
+                        tps_drop: float = 0.20) -> dict:
+    """Gate the current run against a committed baseline: tokens/s may not
+    drop more than ``tps_drop`` (20%), and no gate metric may regress —
+    recompiles/stalls/peak-blocks above baseline or hit rate below it."""
+    cur = _report_metrics(report)
+    checks = []
+
+    def check(name, ok):
+        checks.append({"metric": name, "ok": bool(ok),
+                       "current": cur.get(name),
+                       "baseline": baseline.get(name)})
+
+    check("tokens_per_s",
+          cur["tokens_per_s"] >= (1.0 - tps_drop) * baseline["tokens_per_s"])
+    check("recompiles_after_warmup",
+          cur["recompiles_after_warmup"] <= baseline["recompiles_after_warmup"])
+    for name, worse_is_higher in (("prefix_hit_rate", False),
+                                  ("blocks_peak", True),
+                                  ("decode_stalls", True)):
+        if name not in baseline:
+            continue
+        if name not in cur:
+            check(name, False)          # metric vanished: that's a regression
+            continue
+        check(name, cur[name] <= baseline[name] if worse_is_higher
+              else cur[name] >= baseline[name])
+    return {"ok": all(c["ok"] for c in checks), "tps_drop_allowed": tps_drop,
+            "checks": checks}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -194,8 +345,32 @@ def main() -> None:
                     help="skip the 3-family chunked-identity check")
     ap.add_argument("--skip-paged", action="store_true",
                     help="skip the paged-KV shared-prefix workload")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run ONLY the multi-device sharded gate (needs >= 8 "
+                         "devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--compare", default="",
+                    help="baseline JSON (results/serve_bench_baseline.json): "
+                         "fail on >20%% tokens/s drop or any gate-metric "
+                         "regression; the diff lands next to --json")
+    ap.add_argument("--write-baseline", default="",
+                    help="write this run's gate metrics as a new baseline")
     ap.add_argument("--json", default="", help="also write the report here")
     args = ap.parse_args()
+
+    if args.sharded and (args.compare or args.write_baseline):
+        ap.error("--sharded is a standalone gate (token identity, not "
+                 "throughput); run --compare/--write-baseline on the "
+                 "standard bench")
+    if args.sharded:
+        report = {"sharded": sharded_serve_gate()}
+        out = json.dumps(report, indent=1)
+        print(out)
+        if args.json:
+            p = Path(args.json)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(out)
+        return
 
     from repro.configs import get_config, reduced_config
     from repro.launch.serve import build_engine
@@ -261,12 +436,30 @@ def main() -> None:
         report["chunked_identity"] = verify_chunked_identity()
     if not args.skip_paged:
         report["paged_prefix"] = paged_shared_prefix_gate()
+    compare = None
+    if args.compare:
+        committed = json.loads(Path(args.compare).read_text())
+        compare = compare_to_baseline(report, committed)
+        report["compare"] = compare
     out = json.dumps(report, indent=1)
     print(out)
     if args.json:
         p = Path(args.json)
         p.parent.mkdir(parents=True, exist_ok=True)
         p.write_text(out)
+        if compare is not None:
+            # the diff is its own artifact so a failed gate is one click away
+            (p.parent / "serve_bench_compare.json").write_text(
+                json.dumps(compare, indent=1))
+    if args.write_baseline:
+        p = Path(args.write_baseline)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(_report_metrics(report), indent=1) + "\n")
+    if compare is not None:
+        assert compare["ok"], (
+            "serve_bench regressed against the committed baseline:\n"
+            + json.dumps([c for c in compare["checks"] if not c["ok"]],
+                         indent=1))
 
     assert recompiles == 0, \
         f"{recompiles} recompiles after warmup — bucketing is broken"

@@ -16,8 +16,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core import (EDGE_TPU, MensaScheduler, characterize_model,
-                        evaluate_model, monolithic_cost, rule_cluster)
+from repro.core import (MensaScheduler, characterize_model,
+                        evaluate_model, rule_cluster)
 from repro.core.strategy import plan
 from repro.configs import get_config, reduced_config
 from repro.edge import get_model

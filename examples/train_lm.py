@@ -15,7 +15,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.configs import get_config, reduced_config
+from repro.configs import get_config
 from repro.ft.watchdog import FailureInjector, run_with_restarts
 from repro.launch.train import train_once
 

@@ -15,7 +15,6 @@ Sources ([source; verified-tier] per assignment):
 """
 from __future__ import annotations
 
-import dataclasses
 
 from ..models.model_config import ArchConfig
 

@@ -11,11 +11,8 @@ serve the paper's int8 edge models (1 B) and the TPU-level bf16 models (2 B).
 """
 from __future__ import annotations
 
-import dataclasses
 import enum
-import math
 from dataclasses import dataclass, field
-from typing import Iterable, Sequence
 
 
 class LayerKind(enum.Enum):

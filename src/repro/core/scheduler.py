@@ -18,7 +18,7 @@ transfer cost of their other in-edges.)
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from .accelerators import (AcceleratorConfig, CLUSTER_TO_ACCELERATOR,
                            MENSA_ACCELERATORS)

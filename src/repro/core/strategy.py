@@ -25,7 +25,6 @@ transfer through DRAM" replaced by "resharding collective on ICI".
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 
 from ..models.model_config import ArchConfig

@@ -23,7 +23,6 @@ share an implementation.
 from __future__ import annotations
 
 import statistics
-import time
 from dataclasses import dataclass, field
 from typing import Callable
 

@@ -1,7 +1,4 @@
 """Pure-jnp oracle (re-exports the model-level reference attention)."""
-import jax
-import jax.numpy as jnp
-
 from ...models.attention import reference_attention
 
 

@@ -2,7 +2,6 @@
 run the paged gather-attention kernel over the updated pool."""
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ gates, and writes h_t.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -30,3 +30,47 @@ def make_host_mesh(shape=(1,), axes=("data",)):
     if len(jax.devices()) < n:
         raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
     return jax.make_mesh(shape, axes)
+
+
+def make_serve_mesh(dp: int | None = None, mp: int = 1):
+    """Serving mesh: a (data, model) grid over the first dp*mp devices.
+
+    ``dp`` defaults to every device not consumed by ``mp`` — so
+    ``make_serve_mesh()`` is pure data parallelism over all devices, the
+    layout that keeps sharded serving bitwise identical to single-device
+    (per-slot math never crosses a shard).  ``mp > 1`` adds tensor
+    parallelism through the Mensa cluster specs in shardings.py.
+
+    Host-device emulation (CI, laptops):
+      XLA_FLAGS=--xla_force_host_platform_device_count=8
+    """
+    import numpy as np
+    ndev = len(jax.devices())
+    if mp < 1:
+        raise ValueError(f"mp must be >= 1, got {mp}")
+    if dp is None:
+        dp = max(1, ndev // mp)
+    if dp < 1:
+        raise ValueError(f"dp must be >= 1, got {dp}")
+    if dp * mp > ndev:
+        raise RuntimeError(f"mesh {dp}x{mp} needs {dp * mp} devices, "
+                           f"have {ndev}")
+    devices = np.asarray(jax.devices()[:dp * mp]).reshape(dp, mp)
+    return jax.sharding.Mesh(devices, ("data", "model"))
+
+
+def parse_mesh_arg(spec: str):
+    """Parse a ``--mesh`` string: "auto" (all devices, data-parallel),
+    "off"/"none" (no mesh), or "DPxMP" (e.g. "4x2")."""
+    s = spec.strip().lower()
+    if s in ("off", "none", ""):
+        return None
+    if s == "auto":
+        return make_serve_mesh()
+    dp, _, mp = s.partition("x")
+    try:
+        dp, mp = int(dp), int(mp) if mp else 1
+    except ValueError as e:
+        raise ValueError(f"--mesh {spec!r}: expected 'auto', 'off', or "
+                         f"'DPxMP' like '4x2'") from e
+    return make_serve_mesh(dp, mp)

@@ -24,6 +24,7 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
                  kv_block_size: int | None = None,
                  kv_blocks: int | None = None,
                  prefix_cache: bool = True,
+                 mesh=None, param_strategy: str = "tp",
                  plan_cfg=None, profiles=None) -> ServeEngine:
     """Engine with the prefill/decode programs routed through their
     Mensa execution profiles (runtime-safe overrides only — the phase models
@@ -33,7 +34,11 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
     (a (prefill, decode) pair) to reuse already-computed plans.
     ``max_bucket`` caps the prefill buckets below max_len so longer prompts
     exercise the chunked path.  ``kv_block_size``/``kv_blocks``/
-    ``prefix_cache`` switch KV storage to the paged pool (serve/kvpool.py)."""
+    ``prefix_cache`` switch KV storage to the paged pool (serve/kvpool.py).
+    ``mesh`` shards weights, slot state, and the block pool over a
+    (data, model) device mesh (``launch.mesh.make_serve_mesh``);
+    ``param_strategy`` picks the weight layout ("tp" Mensa clusters /
+    "dp" replicated)."""
     prefill_prof, decode_prof = profiles or phase_profiles(plan_cfg or cfg)
     model = build_model(cfg)
     if params is None:
@@ -51,6 +56,7 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
         prefill_chunk=prefill_chunk,
         kv_block_size=kv_block_size, kv_blocks=kv_blocks,
         prefix_cache=prefix_cache,
+        mesh=mesh, param_strategy=param_strategy,
         prefill_model=build_model(prefill_cfg) if prefill_cfg != cfg else None,
         decode_model=build_model(decode_cfg) if decode_cfg != cfg else None)
 
@@ -97,7 +103,29 @@ def parse_args(argv=None) -> argparse.Namespace:
                     help="keep only the k most likely tokens (0 = off)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1 = off)")
+    ap.add_argument("--mesh", default="off",
+                    help="device mesh for sharded serving: 'off' (default), "
+                         "'auto' (all devices, data-parallel), or 'DPxMP' "
+                         "(e.g. '4x2'); emulate devices on CPU with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    ap.add_argument("--dp", type=int, default=None,
+                    help="data-parallel mesh axis (overrides --mesh; shards "
+                         "slots and the paged block pool)")
+    ap.add_argument("--mp", type=int, default=None,
+                    help="model-parallel mesh axis (overrides --mesh; Mensa "
+                         "cluster tensor parallelism)")
+    ap.add_argument("--param-strategy", default="tp", choices=("tp", "dp"),
+                    help="weight sharding template on a mesh: Mensa cluster "
+                         "TP or replicated-dp")
     return ap.parse_args(argv)
+
+
+def mesh_from_args(args):
+    """Resolve --mesh / --dp / --mp into a Mesh (or None for unsharded)."""
+    from .mesh import make_serve_mesh, parse_mesh_arg
+    if args.dp is not None or args.mp is not None:
+        return make_serve_mesh(args.dp, args.mp or 1)
+    return parse_mesh_arg(args.mesh)
 
 
 def main(argv=None) -> None:
@@ -113,6 +141,10 @@ def main(argv=None) -> None:
           f"overrides={decode_prof.cfg_overrides}")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = mesh_from_args(args)
+    if mesh is not None:
+        print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices "
+              f"(param strategy {args.param_strategy})")
     engine = build_engine(cfg, slots=args.slots, max_len=args.max_len,
                           min_bucket=args.min_bucket,
                           max_bucket=args.max_bucket,
@@ -122,6 +154,7 @@ def main(argv=None) -> None:
                           kv_block_size=args.kv_block_size,
                           kv_blocks=args.kv_blocks,
                           prefix_cache=args.prefix_cache,
+                          mesh=mesh, param_strategy=args.param_strategy,
                           profiles=(prefill_prof, decode_prof))
     if args.warmup:
         engine.warmup()

@@ -180,6 +180,70 @@ def state_specs(model: Model, mesh: Mesh, batch: int, max_len: int) -> PyTree:
             "tail": [one(k, False) for k in model.tail_kinds]}
 
 
+def serve_state_specs(model: Model, mesh: Mesh, slots: int, max_len: int, *,
+                      kv_block_size: int | None = None,
+                      kv_blocks: int | None = None) -> PyTree:
+    """Specs mirroring ``Model.init_states`` for the SERVING path.
+
+    Serving shards differently from training (:func:`state_specs`): the slot
+    (batch) axis goes on the data axes — per-slot decode math then never
+    crosses a shard, which keeps a pure-dp mesh bitwise identical to
+    single-device — and per-head / recurrence-width axes go on ``model`` only
+    when they divide the axis size.  A paged KV pool has no batch axis; its
+    BLOCK axis is sharded over the data axes instead (each shard owns a
+    contiguous stripe of physical blocks — the layout serve/kvpool.py's
+    per-shard accounting mirrors), falling back to replicated when
+    ``kv_blocks`` does not divide evenly.
+    """
+    cfg = model.cfg
+    d = data_axes(mesh)
+    nd = int(np.prod([mesh.shape[a] for a in d]))
+    mp = int(mesh.shape.get("model", 1))
+    b = d if slots % nd == 0 and slots >= nd else None
+    if kv_block_size is not None and kv_blocks is None:
+        kv_blocks = slots * (-(-max_len // kv_block_size))
+    blk = d if kv_blocks is not None and kv_blocks % nd == 0 \
+        and kv_blocks >= nd else None
+
+    def wax(n: int):
+        """`model` for a width/head axis only when it splits evenly."""
+        return "model" if mp > 1 and n and n % mp == 0 else None
+
+    from ..models.attention import KVCache, PagedKVCache
+    from ..models.transformer import BlockState
+
+    def one(kind, stacked: bool):
+        pad = (None,) if stacked else ()
+        if kind in ("attn", "dec") and kv_block_size is not None:
+            kv = PagedKVCache(
+                k=P(*pad, blk, None, wax(cfg.num_kv_heads), None),
+                v=P(*pad, blk, None, wax(cfg.num_kv_heads), None),
+                length=P(*pad, b))
+            return BlockState(kv=kv)
+        if kind in ("attn", "dec", "local"):
+            kv = KVCache(
+                k=P(*pad, b, None, wax(cfg.num_kv_heads), None),
+                v=P(*pad, b, None, wax(cfg.num_kv_heads), None),
+                length=P(*pad, b))
+            return BlockState(kv=kv)
+        if kind == "rec":
+            return BlockState(rec={
+                "conv": P(*pad, b, None, wax(cfg.d_rnn)),
+                "h": P(*pad, b, wax(cfg.d_rnn))})
+        if kind == "ssm":
+            return BlockState(rec={
+                "conv": P(*pad, b, None, wax(cfg.d_inner)),
+                "h": P(*pad, b, wax(cfg.d_inner), None)})
+        raise ValueError(kind)
+
+    groups = {}
+    for j, kind in enumerate(model.pattern):
+        if model.n_groups > 0:
+            groups[str(j)] = one(kind, True)
+    return {"groups": groups,
+            "tail": [one(k, False) for k in model.tail_kinds]}
+
+
 def to_named(tree: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), tree,

@@ -11,16 +11,14 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..ckpt import checkpoint as ckpt_lib
 from ..configs import get_config, reduced_config
 from ..data.pipeline import DataConfig, SyntheticTokens
-from ..ft.watchdog import FailureInjector, InjectedFailure, StepWatchdog, \
+from ..ft.watchdog import FailureInjector, StepWatchdog, \
     run_with_restarts
 from ..models import build_model
 from ..train import optim

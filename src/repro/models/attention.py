@@ -16,7 +16,6 @@ lowering path.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -263,15 +262,31 @@ def init_paged_kv_cache(batch: int, num_blocks: int, block_size: int,
         length=jnp.zeros((batch,), jnp.int32))
 
 
-def gather_paged_kv(cache: PagedKVCache, block_table: jax.Array):
+def gather_paged_kv(cache: PagedKVCache, block_table: jax.Array,
+                    gather_spec=None):
     """Materialize each slot's logical KV sequence through its table row:
     (B, nb*bs, KVH, hd).  Sentinel entries clamp to the last block — their
-    positions are always masked by the callers' validity masks."""
+    positions are always masked by the callers' validity masks.
+
+    ``gather_spec``: optional ``jax.sharding.NamedSharding`` for the gathered
+    (B, S, KVH, hd) tensors — or a callable ``batch_size -> sharding | None``
+    (the serving programs gather at different batch sizes: the decode step at
+    ``slots``, batched prefill at the batch bucket, the chunk continuation at
+    1).  When the pool's block axis is sharded over a mesh, the gather
+    crosses shards; constraining its output to the *slot* layout (batch on
+    the data axes) lets XLA route the cross-shard traffic once here instead
+    of re-deciding the layout per consumer — and keeps the downstream
+    attention math slot-local."""
     b, nb = block_table.shape
     bs = cache.k.shape[1]
     idx = jnp.minimum(block_table, cache.k.shape[0] - 1)
     ks = cache.k[idx].reshape(b, nb * bs, *cache.k.shape[2:])
     vs = cache.v[idx].reshape(b, nb * bs, *cache.v.shape[2:])
+    if callable(gather_spec):
+        gather_spec = gather_spec(b)
+    if gather_spec is not None:
+        ks = jax.lax.with_sharding_constraint(ks, gather_spec)
+        vs = jax.lax.with_sharding_constraint(vs, gather_spec)
     return ks, vs
 
 
@@ -284,7 +299,8 @@ def _scatter_paged(pool: jax.Array, blk: jax.Array, off: jax.Array,
 
 def paged_decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
                            cache: PagedKVCache, block_table: jax.Array, *,
-                           write_mask: jax.Array | None = None
+                           write_mask: jax.Array | None = None,
+                           gather_spec=None
                            ) -> tuple[jax.Array, PagedKVCache]:
     """One-token attention against the paged pool — the paged twin of
     :func:`decode_attention`, bitwise-identical to it on any trace whose
@@ -307,7 +323,8 @@ def paged_decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
     k_pool = _scatter_paged(cache.k, blk, idx % bs, new_k[:, 0])
     v_pool = _scatter_paged(cache.v, blk, idx % bs, new_v[:, 0])
     new_cache = cache._replace(k=k_pool, v=v_pool)
-    ks, vs = gather_paged_kv(new_cache, block_table)             # (B,Smax,..)
+    ks, vs = gather_paged_kv(new_cache, block_table,
+                             gather_spec)                        # (B,Smax,..)
     smax = ks.shape[1]
 
     qg = (q.reshape(b, kvh, g, hd) * scale).astype(jnp.float32)
@@ -349,7 +366,8 @@ def paged_fill_cache(cache: PagedKVCache, k: jax.Array, v: jax.Array,
 
 def paged_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                           cache: PagedKVCache, block_table: jax.Array, *,
-                          offset: jax.Array, length: jax.Array
+                          offset: jax.Array, length: jax.Array,
+                          gather_spec=None
                           ) -> tuple[jax.Array, PagedKVCache]:
     """Chunked-prefill continuation against the paged pool (full causal
     attention only — the paged twin of the ``window == 0`` arm of
@@ -376,7 +394,8 @@ def paged_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     k_pool = _scatter_paged(cache.k, blk, pos % bs, k)
     v_pool = _scatter_paged(cache.v, blk, pos % bs, v)
     new_cache = cache._replace(k=k_pool, v=v_pool)
-    ks, vs = gather_paged_kv(new_cache, block_table)            # (B,Smax,...)
+    ks, vs = gather_paged_kv(new_cache, block_table,
+                             gather_spec)                       # (B,Smax,...)
     smax = ks.shape[1]
 
     qg = (q.reshape(b, c, kvh, g, hd) * scale).astype(jnp.float32)

@@ -12,9 +12,7 @@ Conventions
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -19,7 +19,6 @@ large GEMM (the paper's decoupled input/hidden MVM schedule, §5.4).
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

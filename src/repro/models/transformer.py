@@ -13,8 +13,6 @@ Three entry points per model:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -116,6 +114,7 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                 length: jax.Array | None = None,
                 offset: jax.Array | None = None,
                 block_table: jax.Array | None = None,
+                gather_spec=None,
                 ) -> tuple[jax.Array, BlockState | None, jax.Array]:
     """One residual block. mode: train|prefill|decode.
     ``length``: (B,) valid prefix lengths for right-padded prefill — serving
@@ -128,6 +127,10 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
     ``block_table``: (B, max_len/bs) physical block ids when this block's KV
     cache is paged (state.kv is a PagedKVCache) — one table shared by every
     paged layer.
+    ``gather_spec``: optional NamedSharding for the paged ops' gathered
+    (B, S, KVH, hd) K/V — set when the block pool is sharded over a mesh so
+    the cross-shard gather lands in the slot layout once (see
+    attention.gather_paged_kv).
     Returns (x, new_state, load_balance_aux)."""
     new_state = state
     lb = jnp.zeros((), jnp.float32)
@@ -141,7 +144,8 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
             wm = None if length is None else length > 0
             if paged:
                 out, kv = attn_lib.paged_decode_attention(
-                    q, k, v, state.kv, block_table, write_mask=wm)
+                    q, k, v, state.kv, block_table, write_mask=wm,
+                    gather_spec=gather_spec)
             else:
                 out, kv = attn_lib.decode_attention(
                     q, k, v, state.kv,
@@ -155,7 +159,7 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
             if paged:
                 out, kv = attn_lib.paged_chunk_attention(
                     q, k, v, state.kv, block_table, offset=offset,
-                    length=length)
+                    length=length, gather_spec=gather_spec)
             else:
                 out, kv = attn_lib.chunk_attention(
                     q, k, v, state.kv, offset=offset, length=length,
@@ -442,8 +446,15 @@ class Model:
     # ----------------------------------------------------------- serving path
     def init_states(self, batch: int, max_len: int, *,
                     kv_block_size: int | None = None,
-                    kv_blocks: int | None = None) -> PyTree:
+                    kv_blocks: int | None = None,
+                    shardings: PyTree | None = None) -> PyTree:
         """Stacked per-group states + tail states for the serving path.
+
+        ``shardings``: optional pytree of ``NamedSharding`` mirroring the
+        returned structure (``launch.shardings.serve_state_specs`` builds it)
+        — the states are placed onto the mesh before returning, so a
+        mesh-aware engine never round-trips the full dense pool through a
+        single device.
 
         ``kv_block_size``/``kv_blocks``: when set, full-attention layers
         ("attn"/"dec" self-attention) store KV as a PAGED pool of
@@ -489,12 +500,15 @@ class Model:
                 groups[str(j)] = jax.tree.map(
                     lambda a: jnp.broadcast_to(
                         a[None], (self.n_groups,) + a.shape).copy(), one(kind))
-        return {"groups": groups,
-                "tail": [one(k) for k in self.tail_kinds]}
+        out = {"groups": groups,
+               "tail": [one(k) for k in self.tail_kinds]}
+        if shardings is not None:
+            out = jax.device_put(out, shardings)
+        return out
 
     def _run_stack_serving(self, params, states, x, positions, mode,
                            memory=None, length=None, offset=None,
-                           block_table=None):
+                           block_table=None, gather_spec=None):
         cfg = self.cfg
 
         def group_fn(x, gp_state):
@@ -504,7 +518,8 @@ class Model:
                 x, ns, _ = apply_block(cfg, kind, gp[str(j)], x, positions,
                                        mode=mode, state=gstate[str(j)],
                                        memory=memory, length=length,
-                                       offset=offset, block_table=block_table)
+                                       offset=offset, block_table=block_table,
+                                       gather_spec=gather_spec)
                 new_states[str(j)] = ns
             return x, new_states
 
@@ -533,12 +548,14 @@ class Model:
             x, ns, _ = apply_block(cfg, kind, p_t, x, positions,
                                    mode=mode, state=st, memory=memory,
                                    length=length, offset=offset,
-                                   block_table=block_table)
+                                   block_table=block_table,
+                                   gather_spec=gather_spec)
             new_tail.append(ns)
         return x, {"groups": new_group_states, "tail": new_tail}
 
     def prefill(self, params, tokens, states, modality=None, src_embeds=None,
-                length=None, offset=None, block_table=None):
+                length=None, offset=None, block_table=None,
+                gather_spec=None):
         """Process the prompt; fill caches; return last-position logits.
 
         ``length``: optional (B,) int32 valid prompt lengths for RIGHT-padded
@@ -559,7 +576,11 @@ class Model:
 
         ``block_table``: (B, max_len/bs) int32, required when the states were
         built with ``init_states(kv_block_size=...)`` — paged layers write
-        (and, for chunked continuation, read) their KV through it."""
+        (and, for chunked continuation, read) their KV through it.
+
+        ``gather_spec``: optional NamedSharding (or ``batch -> sharding``
+        callable) for the paged ops' gathered K/V — a mesh-aware engine
+        passes its layout here per call; the model itself stays stateless."""
         cfg = self.cfg
         memory = None
         if offset is not None:
@@ -576,7 +597,7 @@ class Model:
             else offset[:, None] + base
         x, states = self._run_stack_serving(params, states, x, positions,
                                             "prefill", memory, length, offset,
-                                            block_table)
+                                            block_table, gather_spec)
         x = _norm(cfg, params["final_norm"], x)
         if length is None:
             x_last = x[:, -1:]
@@ -589,7 +610,7 @@ class Model:
         return logits, states, memory
 
     def decode_step(self, params, token, states, position, memory=None,
-                    active=None, block_table=None):
+                    active=None, block_table=None, gather_spec=None):
         """token: (B,1) -> logits (B,1,V), updated states.
 
         ``active``: optional (B,) bool — False rows leave every piece of
@@ -600,14 +621,18 @@ class Model:
 
         ``block_table``: (B, max_len/bs) int32 for paged states — the new
         token's KV is scattered through it and attention gathers the slot's
-        logical sequence from the block pool."""
+        logical sequence from the block pool.
+
+        ``gather_spec``: optional NamedSharding (or ``batch -> sharding``
+        callable) routing the gathered K/V onto a mesh (see ``prefill``)."""
         cfg = self.cfg
         x = self._embed_inputs(params, token)
         positions = jnp.broadcast_to(position[:, None], token.shape)
         length = None if active is None else active.astype(jnp.int32)
         x, states = self._run_stack_serving(params, states, x, positions,
                                             "decode", memory, length,
-                                            block_table=block_table)
+                                            block_table=block_table,
+                                            gather_spec=gather_spec)
         x = _norm(cfg, params["final_norm"], x)
         table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
         logits = unembed(x, table)[..., :cfg.vocab_size]

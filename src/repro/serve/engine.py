@@ -37,6 +37,17 @@ Sampling is per-request (temperature / top-k / top-p / seed carried in the
 slot pool) and happens inside the jitted programs; greedy requests take the
 exact argmax path, bit-for-bit identical to a sampling-free engine.
 
+Serving is optionally *sharded* (``mesh=...``): model weights route through
+the Mensa cluster specs in ``launch/shardings.py``, per-slot serving state
+shards its slot axis over the mesh's data axes (``serve_state_specs``), and a
+paged block pool shards its BLOCK axis the same way — each shard owns a
+contiguous stripe of physical blocks, mirrored host-side by the pool's
+per-shard accounting.  Every program is jitted with ``NamedSharding``-pinned
+state outputs, so the compiled inventory stays closed (zero recompiles) on
+1, 2, or 8 devices alike; on a pure data-parallel mesh no per-slot reduction
+ever crosses a shard and generated tokens are bitwise identical to the
+single-device engine.
+
 ``step`` interleaves work per tick — in-flight chunks advance, then at most
 ``max_prefill_per_step`` admissions, then one lockstep decode step whose
 ``active`` mask freezes dead and mid-prefill slots bit-for-bit.
@@ -57,6 +68,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from ..models.attention import PagedKVCache
 from ..models.transformer import Model
@@ -138,6 +150,10 @@ class EngineStats:
     blocks_copied: int = 0              # copy-on-write clones
     blocks_evicted: int = 0             # LRU evictions of cached blocks
     decode_stalls: int = 0              # slot-ticks frozen waiting for blocks
+    # ---- sharded pool (mesh engines; kv_shards == 1 otherwise) ----
+    kv_shards: int = 1
+    kv_in_use_per_shard: list = field(default_factory=list)
+    kv_peak_per_shard: list = field(default_factory=list)   # sums to peak
 
     def record_ttft(self, v: float) -> None:
         self.ttft_count += 1
@@ -199,6 +215,10 @@ class EngineStats:
                 "blocks_evicted": self.blocks_evicted,
                 "decode_stalls": self.decode_stalls,
             }
+            if self.kv_shards > 1:
+                out["kv"]["shards"] = self.kv_shards
+                out["kv"]["in_use_per_shard"] = list(self.kv_in_use_per_shard)
+                out["kv"]["peak_per_shard"] = list(self.kv_peak_per_shard)
         return out
 
 
@@ -233,6 +253,8 @@ class ServeEngine:
                  kv_block_size: int | None = None,
                  kv_blocks: int | None = None,
                  prefix_cache: bool = True,
+                 mesh=None,
+                 param_strategy: str = "tp",
                  prefill_model: Model | None = None,
                  decode_model: Model | None = None):
         """``greedy`` is a legacy knob: sampling is now per-request
@@ -245,12 +267,30 @@ class ServeEngine:
         pass less to actually cap KV memory).  ``prefix_cache``: share
         same-prefix KV blocks across requests via the radix tree; requires
         every layer to be a full-attention layer (block-sharable state) and
-        silently disables itself otherwise."""
+        silently disables itself otherwise.
+
+        ``mesh``: optional ``jax.sharding.Mesh`` with (data, model) axes
+        (``launch.mesh.make_serve_mesh``).  Weights shard through
+        ``launch.shardings.param_specs`` (``param_strategy``: "tp" for the
+        Mensa cluster templates, "dp" for replicated blocks), serving state
+        through ``serve_state_specs`` (slots and — paged — pool blocks over
+        the data axes; heads/recurrence width over ``model`` when they
+        divide it).  Axes that don't divide evenly fall back to replicated,
+        so any mesh serves any shape.  Program outputs are pinned to the
+        canonical state sharding, keeping the compiled inventory closed."""
         del greedy                      # superseded by per-request sampling
         self.model = model
-        self.params = params
+        self.mesh = mesh
         self.slots = slots
         self.max_len = max_len
+        # number of data shards the mesh carries (1 = unsharded)
+        if mesh is not None:
+            from ..launch.mesh import data_axes
+            self._nd = int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+            self._data_axes = data_axes(mesh)
+        else:
+            self._nd = 1
+            self._data_axes = ()
         self.buckets = tuple(sorted(buckets)) if buckets \
             else prefill_buckets(max_len, min_bucket)
         if self.buckets[-1] > max_len:
@@ -290,13 +330,35 @@ class ServeEngine:
             # recurrent states are not block-addressable)
             kinds = tuple(model.pattern) + tuple(model.tail_kinds)
             prefix_ok = bool(kinds) and all(k == "attn" for k in kinds)
+            # the device pool shards its block axis over the data axes only
+            # when the stripes come out equal — the host-side accounting
+            # mirrors exactly that layout
+            shards = self._nd if self._nd > 1 \
+                and kv_blocks % self._nd == 0 else 1
             self.kv = PagedKVManager(
                 slots=slots, max_len=max_len, block_size=kv_block_size,
                 num_blocks=kv_blocks,
-                prefix_cache=prefix_cache and prefix_ok)
+                prefix_cache=prefix_cache and prefix_ok,
+                shards=shards)
             self._state_kw = dict(kv_block_size=kv_block_size,
                                   kv_blocks=kv_blocks)
-        self.states = model.init_states(slots, max_len, **self._state_kw)
+        # ------------------------------------------------- mesh placement
+        self._state_shardings = None
+        self._kv_gather_spec = None
+        if mesh is not None:
+            from ..launch import shardings as shard_lib
+            specs = shard_lib.serve_state_specs(
+                model, mesh, slots, max_len, **self._state_kw)
+            self._state_shardings = shard_lib.to_named(specs, mesh)
+            params = jax.device_put(
+                params, shard_lib.to_named(
+                    shard_lib.param_specs(model.cfg, params,
+                                          strategy=param_strategy), mesh))
+            if self.kv is not None:
+                self._kv_gather_spec = self._make_gather_spec()
+        self.params = params
+        self.states = model.init_states(slots, max_len, **self._state_kw,
+                                        shardings=self._state_shardings)
         self.memory = None
         self.requests: list[Request | None] = [None] * slots
         self.positions = np.zeros(slots, np.int32)
@@ -306,12 +368,26 @@ class ServeEngine:
         self.samp_topp = np.ones(slots, np.float32)
         self.samp_seed = np.zeros(slots, np.int32)
         # donate the pool state: every program updates slots in place instead
-        # of copying the whole pool each call
-        self._decode = jax.jit(self._decode_and_sample, donate_argnums=(2,))
+        # of copying the whole pool each call.  On a mesh, pin the state
+        # outputs to the canonical sharding — otherwise XLA's propagated
+        # choice could differ from the input placement and the next call
+        # would recompile on the changed sharding.
+        if mesh is None:
+            out_sh = dict(decode=None, prefill=None, chunk=None, copy=None)
+        else:
+            repl = NamedSharding(mesh, PartitionSpec())
+            st = self._state_shardings
+            out_sh = dict(decode=(repl, st), prefill=(repl, st),
+                          chunk=(repl, st), copy=st)
+        self._decode = jax.jit(self._decode_and_sample, donate_argnums=(2,),
+                               out_shardings=out_sh["decode"])
         self._prefill = jax.jit(self._prefill_and_splice,
-                                donate_argnums=(4,))
-        self._chunk = jax.jit(self._chunk_and_splice, donate_argnums=(5,))
-        self._copy = jax.jit(self._copy_blocks, donate_argnums=(0,)) \
+                                donate_argnums=(4,),
+                                out_shardings=out_sh["prefill"])
+        self._chunk = jax.jit(self._chunk_and_splice, donate_argnums=(5,),
+                              out_shardings=out_sh["chunk"])
+        self._copy = jax.jit(self._copy_blocks, donate_argnums=(0,),
+                             out_shardings=out_sh["copy"]) \
             if self.kv is not None else None
         self._queue: deque[Request] = deque()
         self._prefilling: dict[int, int] = {}   # slot -> prompt tokens consumed
@@ -323,10 +399,32 @@ class ServeEngine:
         self.stats = EngineStats()
         self._init_kv_stats()
 
+    def _make_gather_spec(self):
+        """``batch -> NamedSharding`` routing the paged ops' gathered K/V
+        into the slot layout: batch on the data axes (when the program's
+        batch divides them), heads on ``model`` when they split evenly.
+        Passed per call to prefill/decode_step — the phase models stay
+        stateless and shareable across engines."""
+        mesh, nd, d = self.mesh, self._nd, self._data_axes
+        kvh = self.model.cfg.num_kv_heads
+        mp = int(mesh.shape.get("model", 1))
+        hax = "model" if mp > 1 and kvh and kvh % mp == 0 else None
+
+        def spec(batch: int):
+            if batch % nd == 0 and batch >= nd:
+                return NamedSharding(mesh, PartitionSpec(d, None, hax, None))
+            if hax is not None:
+                return NamedSharding(
+                    mesh, PartitionSpec(None, None, hax, None))
+            return None                  # let XLA pick (e.g. batch-1 chunks)
+
+        return spec
+
     def _init_kv_stats(self) -> None:
         if self.kv is not None:
             self.stats.kv_pool_blocks = self.kv.pool.num_blocks
             self.stats.kv_block_size = self.kv.block_size
+            self.stats.kv_shards = self.kv.shards
 
     def reset_stats(self) -> None:
         self.stats = EngineStats()
@@ -352,8 +450,13 @@ class ServeEngine:
             return
         st, mgr = self.stats, self.kv
         st.kv_blocks_in_use = mgr.in_use
+        st.kv_in_use_per_shard = mgr.in_use_by_shard
         # the pool tracks its high-water mark at alloc/retain time, so the
-        # peak sees blocks that were allocated and released within one tick
+        # peak sees blocks that were allocated and released within one tick;
+        # the per-shard snapshot is the distribution AT that peak, so it sums
+        # to kv_blocks_peak exactly
+        if mgr.pool.peak_in_use >= st.kv_blocks_peak:
+            st.kv_peak_per_shard = mgr.peak_by_shard
         st.kv_blocks_peak = max(st.kv_blocks_peak, mgr.pool.peak_in_use)
         st.kv_blocks_cached = mgr.cached
         st.prefix_queries = mgr.stats.prefix_queries
@@ -459,7 +562,7 @@ class ServeEngine:
         per-slot sampling of the next token (greedy rows take exact argmax)."""
         logits, states = self.decode_model.decode_step(
             params, tokens, pool_states, positions, memory, active,
-            block_table)
+            block_table, gather_spec=self._kv_gather_spec)
         nxt = sample_tokens(logits[:, 0], temp, topk, topp, seed,
                             positions + 1)
         return nxt, states
@@ -481,7 +584,7 @@ class ServeEngine:
             states_n = _adopt_pool_kv(states_n, pool_states)
         logits, states_n, _ = self.prefill_model.prefill(
             params, tokens, states_n, length=lengths,
-            block_table=block_tables)
+            block_table=block_tables, gather_spec=self._kv_gather_spec)
         for i in reversed(range(n)):
             row = _state_row(states_n, i)
             pool_states = _splice_states(pool_states, row, slot_ids[i])
@@ -497,7 +600,7 @@ class ServeEngine:
         row = _gather_slot(pool_states, slot)
         logits, row, _ = self.prefill_model.prefill(
             params, tokens, row, length=length[None], offset=offset[None],
-            block_table=block_table)
+            block_table=block_table, gather_spec=self._kv_gather_spec)
         pool = _splice_states(pool_states, row, slot)
         tok = sample_tokens(logits[:, -1], temp, topk, topp, seed,
                             (offset + length)[None])
@@ -688,8 +791,9 @@ class ServeEngine:
             jnp.asarray(self.positions), self.memory,
             jnp.zeros((self.slots,), bool), self._warm_table(self.slots),
             *zs(self.slots))
-        self.states = self.model.init_states(self.slots, self.max_len,
-                                             **self._state_kw)
+        self.states = self.model.init_states(
+            self.slots, self.max_len, **self._state_kw,
+            shardings=self._state_shardings)
         if self.kv is not None:
             # the device pool was just re-zeroed: drop every cached prefix
             # that described its old contents

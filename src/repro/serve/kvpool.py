@@ -29,7 +29,7 @@ and ``kernels/paged_attention``.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 def blocks_for(tokens: int, block_size: int) -> int:
@@ -191,10 +191,14 @@ class KVBlockPool:
                     contents preserved for future prefix hits).
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, shards: int = 1):
         if num_blocks < 1 or block_size < 1:
             raise ValueError(f"need >= 1 blocks of >= 1 tokens, got "
                              f"{num_blocks} x {block_size}")
+        if shards < 1 or num_blocks % shards:
+            raise ValueError(f"num_blocks {num_blocks} must divide into "
+                             f"{shards} equal shards (the device pool is "
+                             f"sharded in contiguous stripes)")
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.ref = [0] * num_blocks
@@ -203,6 +207,24 @@ class KVBlockPool:
         self.in_use = 0                      # blocks with ref > 0
         self.peak_in_use = 0                 # high-water mark at alloc/retain
                                              # time, before same-tick releases
+        # per-shard mirror of the device layout: when the pool's block axis is
+        # sharded over a mesh, shard i owns the contiguous stripe
+        # [i*N/shards, (i+1)*N/shards) — NamedSharding's split of axis 0.
+        # ``peak_by_shard`` is the per-shard distribution AT the global peak,
+        # so it always sums exactly to ``peak_in_use``.
+        self.shards = shards
+        self.in_use_by_shard = [0] * shards
+        self.peak_by_shard = [0] * shards
+
+    def shard_of(self, block: int) -> int:
+        return block // (self.num_blocks // self.shards)
+
+    def _count(self, block: int, delta: int) -> None:
+        self.in_use += delta
+        self.in_use_by_shard[self.shard_of(block)] += delta
+        if delta > 0 and self.in_use > self.peak_in_use:
+            self.peak_in_use = self.in_use
+            self.peak_by_shard = list(self.in_use_by_shard)
 
     def available(self, tree: RadixPrefixCache) -> int:
         """Blocks allocatable right now: free + cached blocks that cascading
@@ -222,14 +244,12 @@ class KVBlockPool:
         block = self.free.popleft()
         assert self.ref[block] == 0
         self.ref[block] = 1
-        self.in_use += 1
-        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self._count(block, +1)
         return block
 
     def retain(self, block: int) -> None:
         if self.ref[block] == 0:             # cached -> referenced again
-            self.in_use += 1
-            self.peak_in_use = max(self.peak_in_use, self.in_use)
+            self._count(block, +1)
         self.ref[block] += 1
 
     def release(self, block: int, tree: RadixPrefixCache) -> None:
@@ -238,7 +258,7 @@ class KVBlockPool:
         assert self.ref[block] > 0, f"double release of block {block}"
         self.ref[block] -= 1
         if self.ref[block] == 0:
-            self.in_use -= 1
+            self._count(block, -1)
             if not tree.contains(block):
                 self.free.append(block)
 
@@ -273,7 +293,8 @@ class PagedKVManager:
     #: table entries >= num_blocks mean "no block": device code drops writes
     #: through them and masks reads (see models/attention.py).
     def __init__(self, *, slots: int, max_len: int, block_size: int,
-                 num_blocks: int, prefix_cache: bool = True):
+                 num_blocks: int, prefix_cache: bool = True,
+                 shards: int = 1):
         if max_len % block_size:
             raise ValueError(f"max_len {max_len} must be a multiple of "
                              f"kv_block_size {block_size} (the gathered "
@@ -283,7 +304,7 @@ class PagedKVManager:
         self.max_len = max_len
         self.block_size = block_size
         self.blocks_per_slot = max_len // block_size
-        self.pool = KVBlockPool(num_blocks, block_size)
+        self.pool = KVBlockPool(num_blocks, block_size, shards)
         self.tree = RadixPrefixCache(block_size)
         self.prefix_enabled = prefix_cache
         self.sentinel = num_blocks
@@ -309,10 +330,26 @@ class PagedKVManager:
     def blocks_evicted(self) -> int:
         return self.pool.blocks_evicted
 
+    @property
+    def shards(self) -> int:
+        return self.pool.shards
+
+    @property
+    def in_use_by_shard(self) -> list[int]:
+        """Referenced blocks per device shard (sums to :attr:`in_use`)."""
+        return list(self.pool.in_use_by_shard)
+
+    @property
+    def peak_by_shard(self) -> list[int]:
+        """Per-shard distribution at the pool's high-water mark (sums to
+        ``pool.peak_in_use`` exactly)."""
+        return list(self.pool.peak_by_shard)
+
     def reset_stats(self) -> None:
         self.stats = KVPoolStats()
         self.pool.blocks_evicted = 0
         self.pool.peak_in_use = self.pool.in_use
+        self.pool.peak_by_shard = list(self.pool.in_use_by_shard)
 
     def clear(self) -> None:
         """Forget every block and cached prefix (counters survive): the
@@ -321,7 +358,8 @@ class PagedKVManager:
         assert all(o == 0 for o in self.owned), \
             "clear() with slots still holding blocks"
         evicted = self.pool.blocks_evicted
-        self.pool = KVBlockPool(self.pool.num_blocks, self.block_size)
+        self.pool = KVBlockPool(self.pool.num_blocks, self.block_size,
+                                self.pool.shards)
         self.pool.blocks_evicted = evicted
         self.tree = RadixPrefixCache(self.block_size)
         self.table = [[self.sentinel] * self.blocks_per_slot

@@ -13,7 +13,6 @@ state, ready to drop into the trainer.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

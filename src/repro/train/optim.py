@@ -7,7 +7,6 @@ comes for free from the `model`-axis parameter sharding).
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -4,7 +4,6 @@ error-feedback gradient compression (see grad.py).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

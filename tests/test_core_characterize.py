@@ -1,5 +1,4 @@
 """Unit tests for layer characterization (paper §3.2)."""
-import math
 
 import pytest
 

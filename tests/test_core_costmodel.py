@@ -1,5 +1,4 @@
 """Cost-model behaviour tests: rooflines, dataflow effects, paper §3.1 findings."""
-import pytest
 
 from repro.core import (BASE_HB, EDGE_TPU, JACQUARD, PASCAL, PAVLOV, LayerKind,
                         LayerSpec, layer_cost, monolithic_cost)

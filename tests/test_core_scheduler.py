@@ -7,10 +7,9 @@ import random
 
 import pytest
 
-from repro.core import (CLUSTER_TO_ACCELERATOR, JACQUARD, MENSA_ACCELERATORS,
+from repro.core import (CLUSTER_TO_ACCELERATOR, MENSA_ACCELERATORS,
                         PASCAL, PAVLOV, LayerKind, LayerSpec, MensaScheduler,
-                        ModelGraph, characterize_model, rule_cluster,
-                        schedule_cost)
+                        ModelGraph, schedule_cost)
 from repro.edge import edge_zoo
 
 

@@ -1,10 +1,11 @@
 """Multi-device tests — run in a subprocess with 8 forced host devices so the
 main pytest process keeps seeing exactly 1 device (assignment requirement)."""
-import json
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
+
+import pytest
 
 REPO = Path(__file__).resolve().parent.parent
 
@@ -160,5 +161,168 @@ def test_dryrun_entrypoint_on_tiny_mesh():
         cost = normalize_cost_analysis(compiled.cost_analysis())
         assert cost.get("flops", 0) > 0
         print("OK", cost.get("flops"))
+    """))
+    assert "OK" in out
+
+
+@pytest.mark.parametrize("ndev", [1, 2, 8])
+def test_sharded_engine_token_identity(ndev):
+    """A ServeEngine sharded over a {ndev}-device data-parallel mesh must
+    generate exactly the tokens of the unsharded engine — across the causal
+    (qwen3), sliding-window + RG-LRU (recurrentgemma), and Mamba SSM
+    (falcon-mamba) state families — with zero recompiles after warmup."""
+    out = _run(textwrap.dedent(f"""
+        import jax, numpy as np
+        from repro.configs import reduced_config
+        from repro.launch.mesh import make_serve_mesh
+        from repro.models import build_model
+        from repro.serve.engine import Request, ServeEngine
+
+        ndev = {ndev}
+        for arch in ("qwen3-0.6b", "recurrentgemma-2b", "falcon-mamba-7b"):
+            cfg = reduced_config(arch)
+            cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+
+            def trace():
+                rng = np.random.RandomState(7)
+                # short bucketed prompts + one beyond the largest bucket
+                # (chunk-continuation path)
+                lens = [3, 7, 12, 15, 9, 40]
+                return [Request(rid=i,
+                                prompt=rng.randint(1, cfg.vocab_size,
+                                                   n).tolist(),
+                                max_new_tokens=4)
+                        for i, n in enumerate(lens)]
+
+            def build(mesh):
+                return ServeEngine(build_model(cfg), params, slots=8,
+                                   max_len=64, buckets=(16,),
+                                   max_prefill_per_step=4,
+                                   max_prefill_batch=2, mesh=mesh)
+
+            ref = build(None).run(trace())
+            eng = build(make_serve_mesh(ndev, 1))
+            eng.warmup()
+            w = eng.stats.summary()
+            assert w["prefill_compiles"] > 0, "compile counters unavailable"
+            eng.reset_stats()
+            done = eng.run(trace())
+            s = eng.stats.summary()
+            rec = (s["prefill_compiles"] - w["prefill_compiles"]) \\
+                + (s["decode_compiles"] - w["decode_compiles"])
+            assert rec == 0, f"{{arch}}: {{rec}} recompiles after warmup"
+            assert [r.generated for r in done] \\
+                == [r.generated for r in ref], f"{{arch}} diverged on mesh"
+            print("FAMILY-OK", arch)
+        print("OK")
+    """))
+    assert "OK" in out
+    assert out.count("FAMILY-OK") == 3
+
+
+@pytest.mark.parametrize("ndev", [2, 8])
+def test_sharded_paged_prefix_engine(ndev):
+    """The paged + prefix-cache engine on a sharded block pool: identical
+    tokens to the unsharded paged engine, prefix hits intact, and per-shard
+    pool accounting summing to the unsharded totals."""
+    out = _run(textwrap.dedent(f"""
+        import jax, numpy as np
+        from repro.configs import reduced_config
+        from repro.launch.mesh import make_serve_mesh
+        from repro.models import build_model
+        from repro.serve.engine import Request, ServeEngine
+
+        ndev = {ndev}
+        cfg = reduced_config("qwen3-0.6b")
+        cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+        def trace():
+            rng = np.random.RandomState(13)
+            shared = rng.randint(1, cfg.vocab_size, 20).tolist()
+            out = [Request(rid=i, prompt=shared + rng.randint(
+                       1, cfg.vocab_size, 2 + i).tolist(), max_new_tokens=4)
+                   for i in range(5)]
+            out += [Request(rid=100 + i, prompt=rng.randint(
+                        1, cfg.vocab_size, n).tolist(), max_new_tokens=4)
+                    for i, n in enumerate([4, 11, 30])]
+            return out
+
+        def build(mesh):
+            return ServeEngine(build_model(cfg), params, slots=8, max_len=64,
+                               buckets=(16, 32), max_prefill_per_step=4,
+                               kv_block_size=16, kv_blocks=24, mesh=mesh)
+
+        ref = build(None)
+        ref_done = ref.run(trace())
+        ref_kv = ref.stats.summary()["kv"]
+
+        eng = build(make_serve_mesh(ndev, 1))
+        assert eng.kv.shards == ndev
+        eng.warmup()
+        w = eng.stats.summary()
+        eng.reset_stats()
+        done = eng.run(trace())
+        s = eng.stats.summary()
+        rec = (s["prefill_compiles"] - w["prefill_compiles"]) \\
+            + (s["decode_compiles"] - w["decode_compiles"])
+        assert rec == 0, f"{{rec}} recompiles after warmup"
+        assert [r.generated for r in done] == [r.generated for r in ref_done]
+        kv = s["kv"]
+        assert kv["prefix_hit_rate"] > 0
+        assert kv["prefix_hit_rate"] == ref_kv["prefix_hit_rate"]
+        assert kv["shards"] == ndev
+        assert sum(kv["in_use_per_shard"]) == kv["blocks_in_use"]
+        assert sum(kv["peak_per_shard"]) == kv["blocks_peak"]
+        assert kv["blocks_peak"] == ref_kv["blocks_peak"]
+        print("OK")
+    """))
+    assert "OK" in out
+
+
+def test_sharded_engine_tensor_parallel_mesh():
+    """A (4, 2) data x model mesh (Mensa-cluster TP on the weights, sharded
+    KV heads) keeps generated tokens identical to the unsharded engine on
+    the pure-attention stack."""
+    out = _run(textwrap.dedent("""
+        import jax, numpy as np
+        from repro.configs import reduced_config
+        from repro.launch.mesh import make_serve_mesh
+        from repro.models import build_model
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg = reduced_config("qwen3-0.6b")
+        cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+        def trace():
+            rng = np.random.RandomState(3)
+            return [Request(rid=i, prompt=rng.randint(
+                        1, cfg.vocab_size, n).tolist(), max_new_tokens=4)
+                    for i, n in enumerate([5, 9, 14, 30])]
+
+        def build(mesh):
+            return ServeEngine(build_model(cfg), params, slots=4, max_len=64,
+                               buckets=(16,), mesh=mesh)
+
+        ref = build(None).run(trace())
+        eng = build(make_serve_mesh(4, 2))
+        eng.warmup()
+        w = eng.stats.summary()
+        eng.reset_stats()
+        done = eng.run(trace())
+        s = eng.stats.summary()
+        rec = (s["prefill_compiles"] - w["prefill_compiles"]) \\
+            + (s["decode_compiles"] - w["decode_compiles"])
+        assert rec == 0, f"{rec} recompiles after warmup"
+        # empirical, not structural: model-axis collectives reorder
+        # reductions, so a JAX/XLA upgrade could legitimately flip an
+        # argmax tie here — if this trips with no serving change, relax to
+        # a logits-closeness check rather than chasing bitwise TP identity
+        assert [r.generated for r in done] == [r.generated for r in ref], \\
+            "TP mesh tokens diverged (see comment: may be numeric drift)"
+        print("OK")
     """))
     assert "OK" in out

@@ -1,10 +1,9 @@
 """Executor (plan -> execution profile), HLO parser, and shape-rule tests."""
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import SHAPES, applicable, get_config
 from repro.core.executor import execution_profile, plan_for_cell
-from repro.utils.hlo import CollectiveStats, parse_collectives
+from repro.utils.hlo import parse_collectives
 
 HLO_SAMPLE = """
 ENTRY %main {

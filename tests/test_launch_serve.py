@@ -2,7 +2,6 @@
 (regression for main() silently dropping engine knobs), and build_engine must
 wire bucket caps / batching / chunking through to ServeEngine."""
 import jax
-import pytest
 
 from repro.configs import reduced_config
 from repro.launch import serve as serve_mod
@@ -41,6 +40,34 @@ def test_build_engine_passes_paged_kv_knobs_through():
                                     kv_block_size=16)
     assert engine.kv.pool.num_blocks == 2 * 64 // 16   # dense equivalent
     assert engine.kv.prefix_enabled                    # pure-attention stack
+    assert engine.mesh is None                         # unsharded by default
+
+
+def test_build_engine_passes_mesh_through():
+    from repro.launch.mesh import make_serve_mesh
+    cfg = reduced_config("qwen3-0.6b")
+    cfg = cfg.replace(num_layers=len(cfg.block_pattern))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_serve_mesh(1, 1)
+    engine = serve_mod.build_engine(cfg, params, slots=2, max_len=64,
+                                    kv_block_size=16, mesh=mesh)
+    assert engine.mesh is mesh
+    assert engine._state_shardings is not None
+    # params actually landed on the mesh
+    leaf = jax.tree.leaves(engine.params)[0]
+    assert leaf.sharding.mesh.shape == mesh.shape
+
+
+def test_mesh_from_args():
+    args = serve_mod.parse_args([])
+    assert serve_mod.mesh_from_args(args) is None      # --mesh off default
+    args = serve_mod.parse_args(["--mesh", "1x1"])
+    m = serve_mod.mesh_from_args(args)
+    assert dict(m.shape) == {"data": 1, "model": 1}
+    args = serve_mod.parse_args(["--dp", "1"])
+    m = serve_mod.mesh_from_args(args)
+    assert dict(m.shape) == {"data": 1, "model": 1}
 
 
 def test_cli_flags_reach_engine(monkeypatch):
@@ -86,6 +113,8 @@ def test_cli_flags_reach_engine(monkeypatch):
     assert captured["kv_block_size"] == 16
     assert captured["kv_blocks"] == 12
     assert captured["prefix_cache"] is False
+    assert captured["mesh"] is None                    # --mesh off default
+    assert captured["param_strategy"] == "tp"
     assert captured["warmed"] is True
     assert captured["n_requests"] == 4          # 3 short + 1 long
     # sampling knobs land on every submitted request
@@ -95,6 +124,9 @@ def test_cli_flags_reach_engine(monkeypatch):
 
 def test_cli_defaults_parse():
     args = serve_mod.parse_args([])
+    assert args.mesh == "off"                   # unsharded by default
+    assert args.dp is None and args.mp is None
+    assert args.param_strategy == "tp"
     assert args.max_prefill_per_step == 1
     assert args.max_prefill_batch == 4
     assert args.prefill_chunk is None

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.attention import (KVCache, decode_attention, flash_attention,
+from repro.models.attention import (decode_attention, flash_attention,
                                     init_kv_cache, local_attention,
                                     reference_attention)
 

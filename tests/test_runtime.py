@@ -1,8 +1,5 @@
 """Runtime substrate tests: data determinism/resume, checkpoint atomicity +
 auto-resume, failure injection, watchdog, serving engine parity, optimizer."""
-import json
-import os
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +9,7 @@ import pytest
 from repro.ckpt import checkpoint as ckpt_lib
 from repro.configs import reduced_config
 from repro.data.pipeline import DataConfig, PrefetchingLoader, SyntheticTokens
-from repro.ft.watchdog import (FailureInjector, InjectedFailure, StepWatchdog,
+from repro.ft.watchdog import (FailureInjector, StepWatchdog,
                                run_with_restarts)
 from repro.models import build_model
 from repro.train import optim

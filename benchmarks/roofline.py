@@ -24,13 +24,14 @@ from pathlib import Path
 import jax
 
 from repro.configs import ARCHS, SHAPES, applicable, get_config
+from repro.core.accelerators import TPU_V5E
 from repro.utils.hlo import normalize_cost_analysis, parse_collectives
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "roofline"
 
-PEAK_FLOPS = 197e12      # bf16 / chip
-HBM_BW = 819e9           # bytes/s / chip
-ICI_BW = 50e9            # bytes/s / link
+PEAK_FLOPS = TPU_V5E.peak_flops   # bf16 / chip
+HBM_BW = TPU_V5E.hbm_bw           # bytes/s / chip
+ICI_BW = TPU_V5E.ici_bw           # bytes/s / link
 
 # per-cell overrides for the unrolled compile (keep HLO size manageable)
 UNROLL_BLOCK_KV = {"prefill_32k": 2048, "train_4k": 1024}

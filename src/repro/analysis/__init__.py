@@ -1,0 +1,26 @@
+"""jitlint — JAX/Pallas-aware static analysis for the serving stack.
+
+The repo's efficiency-critical invariants (closed compiled-program
+inventory, accelerator constants centralized in ``core/accelerators.py``,
+normalized ``cost_analysis()`` access, optional dev deps never hard-imported,
+Pallas grid/BlockSpec discipline) are each one careless edit away from a
+silent regression that only a slow runtime bench — or a reviewer's memory —
+would catch.  This package checks them *before* anything runs, the same way
+the paper characterizes layers statically to drive execution: an AST pass
+framework (``registry``/``runner``), per-finding rule IDs and severities
+(``findings``), ``# jitlint: ignore[rule]`` pragmas (``pragmas``), a
+``jitlint.toml`` allowlist (``config``), and a CLI::
+
+    PYTHONPATH=src python -m repro.analysis.jitlint src tests
+
+Pure stdlib on purpose: the CI lint job runs it without installing jax.
+"""
+from .config import LintConfig, load_config
+from .findings import Finding, Severity
+from .registry import all_rules, get_rule, register
+from .runner import LintResult, lint_paths
+
+__all__ = [
+    "Finding", "Severity", "LintConfig", "load_config",
+    "register", "get_rule", "all_rules", "lint_paths", "LintResult",
+]

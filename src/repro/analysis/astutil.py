@@ -1,0 +1,190 @@
+"""Shared AST machinery: module model, jit-entry detection, call graphs.
+
+Analysis is deliberately *per-module*: a function is "jit-reachable" when it
+is (a) decorated with ``jax.jit`` / ``jax.pmap`` (bare or under
+``functools.partial``), (b) passed by name to a ``jax.jit(...)`` call
+anywhere in the module (including ``self.method`` references, the engine's
+program-constructor idiom), or (c) transitively called from such a function
+through same-module simple calls (``f(...)`` / ``self.f(...)``).  Cross-
+module reachability is out of scope on purpose — it would need whole-program
+import resolution for marginal extra recall, and every real incident in this
+repo's history (ROADMAP "Known bug classes") was local to one module.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .pragmas import FilePragmas, parse_pragmas
+
+FunctionNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+@dataclass
+class ModuleInfo:
+    path: Path                  # absolute
+    relpath: str                # posix, relative to the lint root
+    source: str
+    tree: ast.Module
+    pragmas: FilePragmas
+    _parents: dict = field(default_factory=dict, repr=False)
+
+    @classmethod
+    def parse(cls, path: Path, relpath: str) -> "ModuleInfo":
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+        info = cls(path=path, relpath=relpath, source=source, tree=tree,
+                   pragmas=parse_pragmas(source))
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                info._parents[child] = parent
+        return info
+
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        return self._parents.get(node)
+
+    def segment(self, node: ast.AST) -> str:
+        return ast.get_source_segment(self.source, node) or ""
+
+
+def dotted_name(node: ast.AST) -> str:
+    """``jax.jit`` -> "jax.jit", ``pl.BlockSpec`` -> "pl.BlockSpec",
+    ``self._decode`` -> "self._decode"; "" when not a plain dotted chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def is_jit_callable(node: ast.AST) -> bool:
+    """Does this expression name a jit-family transform?"""
+    name = dotted_name(node)
+    return name in ("jax.jit", "jit", "jax.pmap", "pmap")
+
+
+def unwrap_partial(call: ast.Call) -> ast.AST | None:
+    """``functools.partial(f, ...)`` / ``partial(f, ...)`` -> ``f``."""
+    if dotted_name(call.func) in ("functools.partial", "partial") \
+            and call.args:
+        return call.args[0]
+    return None
+
+
+def _decorator_is_jit(dec: ast.AST) -> bool:
+    if is_jit_callable(dec):
+        return True
+    if isinstance(dec, ast.Call):
+        if is_jit_callable(dec.func):
+            return True
+        inner = unwrap_partial(dec)
+        if inner is not None and is_jit_callable(inner):
+            return True
+    return False
+
+
+def jit_static_argnames(func: ast.AST) -> frozenset:
+    """Static argnames declared by a ``@partial(jax.jit, static_argnames=...)``
+    or ``@jax.jit(static_argnames=...)`` decorator, when statically literal."""
+    names: set[str] = set()
+    for dec in getattr(func, "decorator_list", []):
+        if not isinstance(dec, ast.Call) or not _decorator_is_jit(dec):
+            continue
+        for kw in dec.keywords:
+            if kw.arg != "static_argnames":
+                continue
+            val = kw.value
+            elts = val.elts if isinstance(val, (ast.Tuple, ast.List)) \
+                else [val]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    names.add(e.value)
+    return frozenset(names)
+
+
+@dataclass
+class JitReachability:
+    """Per-module jit-entry set and its transitive closure."""
+    functions: dict             # bare name -> [FunctionDef]
+    entries: set                # bare names that are jit entry points
+    reachable: set              # entries + same-module transitive callees
+    # every jax.jit(...) Call node in the module, for rule-local inspection
+    jit_calls: list
+
+    def is_reachable(self, func: ast.AST) -> bool:
+        name = getattr(func, "name", None)
+        return name in self.reachable and func in self.functions.get(name, [])
+
+
+def _callee_names(func: ast.AST) -> set:
+    """Bare names of same-module simple calls: ``f(...)``, ``self.f(...)``,
+    ``cls.f(...)``.  Nested function defs are part of their parent's body and
+    therefore already walked."""
+    out = set()
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Call):
+            continue
+        target = node.func
+        if isinstance(target, ast.Name):
+            out.add(target.id)
+        elif isinstance(target, ast.Attribute) \
+                and isinstance(target.value, ast.Name) \
+                and target.value.id in ("self", "cls"):
+            out.add(target.attr)
+    return out
+
+
+def jit_reachability(mod: ModuleInfo) -> JitReachability:
+    functions: dict = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, FunctionNode):
+            functions.setdefault(node.name, []).append(node)
+
+    entries: set = set()
+    jit_calls: list = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, FunctionNode):
+            if any(_decorator_is_jit(d) for d in node.decorator_list):
+                entries.add(node.name)
+        elif isinstance(node, ast.Call) and is_jit_callable(node.func):
+            jit_calls.append(node)
+            if node.args:
+                ref = node.args[0]
+                inner = unwrap_partial(ref) if isinstance(ref, ast.Call) \
+                    else None
+                for candidate in (ref, inner):
+                    name = dotted_name(candidate) if candidate is not None \
+                        else ""
+                    bare = name.rsplit(".", 1)[-1]
+                    if bare in functions:
+                        entries.add(bare)
+
+    reachable = set(entries)
+    frontier = list(entries)
+    while frontier:
+        name = frontier.pop()
+        for func in functions.get(name, []):
+            for callee in _callee_names(func):
+                if callee in functions and callee not in reachable:
+                    reachable.add(callee)
+                    frontier.append(callee)
+    return JitReachability(functions=functions, entries=entries,
+                           reachable=reachable, jit_calls=jit_calls)
+
+
+def enclosing_function(mod: ModuleInfo, node: ast.AST) -> ast.AST | None:
+    cur = mod.parent(node)
+    while cur is not None and not isinstance(cur, FunctionNode):
+        cur = mod.parent(cur)
+    return cur
+
+
+def literal_source_is_decimal(mod: ModuleInfo, node: ast.Constant) -> bool:
+    """True when a numeric literal is written in decimal (or scientific)
+    notation — hex/octal/binary masks and flag words are not config values."""
+    text = mod.segment(node).strip().lower()
+    return not text.startswith(("0x", "0o", "0b"))

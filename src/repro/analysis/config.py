@@ -1,0 +1,110 @@
+"""jitlint.toml loading: excludes, per-rule options, and the allowlist.
+
+The allowlist is the *documented* escape hatch — every entry must carry a
+``reason`` so "why is this exempt" lives next to the exemption, not in a PR
+discussion nobody can find::
+
+    [jitlint]
+    exclude = ["tests/analysis_cases/*"]
+
+    [rules.config-literal]
+    allow_paths = ["src/repro/core/accelerators.py"]
+
+    [[allow]]
+    rule = "JL002"                     # ID or name; "*" for any rule
+    path = "src/repro/launch/shardings.py"
+    reason = "20e9 is a parameter-count threshold, not a hardware constant"
+    # line = 112                       # optional: pin to one line
+
+Parsing uses stdlib ``tomllib`` (3.11+) with a ``tomli`` fallback; when
+neither is importable a present config file is a hard error rather than a
+silently unconfigured run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from fnmatch import fnmatch
+from pathlib import Path
+
+try:
+    import tomllib as _toml
+except ImportError:                                    # Python < 3.11
+    try:
+        import tomli as _toml
+    except ImportError:                                # pragma: no cover
+        _toml = None
+
+DEFAULT_CONFIG_NAME = "jitlint.toml"
+
+
+@dataclass(frozen=True)
+class AllowEntry:
+    rule: str                  # rule ID, rule name, or "*"
+    path: str                  # fnmatch pattern over posix relpaths
+    reason: str
+    line: int = 0              # 0 = any line
+
+    def matches(self, finding) -> bool:
+        if self.rule not in ("*", finding.rule_id, finding.rule_name):
+            return False
+        if self.line and self.line != finding.line:
+            return False
+        return fnmatch(finding.path, self.path)
+
+    def describe(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"allow[{self.rule} @ {loc}]: {self.reason}"
+
+
+@dataclass
+class LintConfig:
+    exclude: list = field(default_factory=list)
+    rule_options: dict = field(default_factory=dict)   # rule name -> options
+    allow: list = field(default_factory=list)          # [AllowEntry]
+    source: str = ""                                   # where it was loaded
+
+    def options_for(self, rule_name: str) -> dict:
+        return self.rule_options.get(rule_name, {})
+
+    def excluded(self, relpath: str) -> bool:
+        return any(fnmatch(relpath, pat) or relpath.startswith(pat.rstrip("*"))
+                   for pat in self.exclude)
+
+    def allowed_by(self, finding) -> AllowEntry | None:
+        for entry in self.allow:
+            if entry.matches(finding):
+                return entry
+        return None
+
+
+def load_config(path: str | Path | None = None,
+                root: str | Path = ".") -> LintConfig:
+    """Load ``path``, or ``<root>/jitlint.toml`` when it exists, else an
+    empty config (rules fall back to their built-in defaults)."""
+    if path is None:
+        candidate = Path(root) / DEFAULT_CONFIG_NAME
+        if not candidate.is_file():
+            return LintConfig()
+        path = candidate
+    path = Path(path)
+    if _toml is None:
+        raise RuntimeError(
+            f"cannot parse {path}: no tomllib/tomli available on this "
+            f"interpreter — run jitlint on Python 3.11+ or install tomli")
+    data = _toml.loads(path.read_text())
+    top = data.get("jitlint", {})
+    allow = []
+    for raw in data.get("allow", []):
+        missing = {"rule", "path", "reason"} - set(raw)
+        if missing:
+            raise ValueError(f"{path}: [[allow]] entry {raw!r} missing "
+                             f"required key(s) {sorted(missing)}")
+        if not str(raw["reason"]).strip():
+            raise ValueError(f"{path}: [[allow]] entry for {raw['path']!r} "
+                             f"has an empty reason — document why")
+        allow.append(AllowEntry(rule=str(raw["rule"]), path=str(raw["path"]),
+                                reason=str(raw["reason"]),
+                                line=int(raw.get("line", 0))))
+    return LintConfig(exclude=list(top.get("exclude", [])),
+                      rule_options=dict(data.get("rules", {})),
+                      allow=allow, source=str(path))

@@ -1,0 +1,53 @@
+"""Finding/severity model shared by every jitlint rule."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+
+class Severity(enum.Enum):
+    # errors gate CI; warnings are reported (and land in the JSON artifact)
+    # but only fail the run under --strict
+    ERROR = "error"
+    WARNING = "warning"
+
+    def __str__(self) -> str:  # pragma: no cover - trivial
+        return self.value
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule_id: str                # "JL001"
+    rule_name: str              # "recompile-hazard"
+    severity: Severity
+    path: str                   # posix relpath from the lint root
+    line: int                   # 1-based
+    col: int                    # 0-based, matching ast
+    message: str
+    end_line: int = 0
+    end_col: int = 0
+    # set by the runner when an allowlist entry absorbed this finding
+    allowed_by: str = field(default="", compare=False)
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}"
+
+    def render(self) -> str:
+        return (f"{self.location()} {self.rule_id} {self.rule_name} "
+                f"[{self.severity.value}] {self.message}")
+
+    def to_dict(self) -> dict:
+        out = {
+            "rule_id": self.rule_id,
+            "rule_name": self.rule_name,
+            "severity": self.severity.value,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "end_line": self.end_line,
+            "end_col": self.end_col,
+            "message": self.message,
+        }
+        if self.allowed_by:
+            out["allowed_by"] = self.allowed_by
+        return out

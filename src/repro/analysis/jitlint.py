@@ -1,0 +1,62 @@
+"""jitlint CLI — ``PYTHONPATH=src python -m repro.analysis.jitlint src tests``.
+
+Exit status: 1 when any error-severity finding survives pragmas and the
+allowlist (warnings gate only under ``--strict``), else 0.  ``--json``
+writes the machine-readable findings (including allowlisted ones) for the CI
+artifact.  Stdlib-only: the lint job runs this without jax installed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .config import load_config
+from .registry import all_rules
+from .report import render_text, to_json
+from .runner import lint_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="jitlint",
+        description="JAX/Pallas-aware static analysis for the serving stack")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to lint (default: src tests)")
+    ap.add_argument("--root", default=".",
+                    help="repo root: relpaths, excludes and the default "
+                         "config resolve against it")
+    ap.add_argument("--config", default=None,
+                    help="jitlint.toml (default: <root>/jitlint.toml "
+                         "when present)")
+    ap.add_argument("--json", default="",
+                    help="also write the findings as JSON here")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings also fail the run")
+    ap.add_argument("--verbose", action="store_true",
+                    help="show allowlisted findings in the text report")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            doc = (sys.modules[type(rule).__module__].__doc__ or "")
+            headline = doc.strip().splitlines()[0] if doc.strip() else ""
+            print(f"{rule.id}  {rule.name:<18} [{rule.severity.value:<7}] "
+                  f"{headline}")
+        return 0
+
+    config = load_config(args.config, root=args.root)
+    result = lint_paths(args.paths, root=args.root, config=config)
+
+    print(render_text(result, verbose=args.verbose))
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(to_json(result))
+    return result.exit_code(strict=args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

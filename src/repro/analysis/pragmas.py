@@ -1,0 +1,74 @@
+"""``# jitlint: ...`` pragma parsing.
+
+Two forms:
+
+  ``# jitlint: ignore[JL001]`` / ``# jitlint: ignore[recompile-hazard]``
+      Suppress the named rule(s) (comma-separated; ``*`` for all) on the
+      pragma's own line — or, when the pragma is the whole line, on the next
+      code line (so long expressions can carry a pragma on the line above).
+
+  ``# jitlint: skip-file``
+      Skip the file entirely (must appear in the first 10 lines).
+
+Rules are matched by ID or by name; unknown rule labels are themselves a
+finding (a stale pragma silently suppressing nothing is how suppressions
+rot), emitted by the runner as JL000.
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+
+_PRAGMA_RE = re.compile(r"#\s*jitlint:\s*(skip-file|ignore\[([^\]]*)\])")
+_SKIP_FILE_SCAN_LINES = 10
+
+
+@dataclass
+class FilePragmas:
+    skip_file: bool = False
+    # line (1-based) -> set of rule labels (IDs or names, or "*")
+    ignores: dict = field(default_factory=dict)
+    # labels seen, with one representative line each (for staleness checks)
+    labels: dict = field(default_factory=dict)
+
+    def suppresses(self, line: int, rule_id: str, rule_name: str) -> bool:
+        labels = self.ignores.get(line)
+        if not labels:
+            return False
+        return "*" in labels or rule_id in labels or rule_name in labels
+
+
+def parse_pragmas(source: str) -> FilePragmas:
+    """Tokenize-based so pragma text inside string literals (docstrings
+    describing the pragma syntax, test fixtures) never counts — only real
+    comments carry pragmas."""
+    out = FilePragmas()
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError):
+        return out                 # unparseable source is the runner's problem
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _PRAGMA_RE.search(tok.string)
+        if not m:
+            continue
+        lineno, col = tok.start
+        if m.group(1) == "skip-file":
+            if lineno <= _SKIP_FILE_SCAN_LINES:
+                out.skip_file = True
+            continue
+        labels = {s.strip() for s in m.group(2).split(",") if s.strip()}
+        if not labels:
+            continue
+        targets = [lineno]
+        if tok.line[:col].strip() == "":
+            # comment-only line: the pragma covers the next line too
+            targets.append(lineno + 1)
+        for t in targets:
+            out.ignores.setdefault(t, set()).update(labels)
+        for lab in labels:
+            out.labels.setdefault(lab, lineno)
+    return out

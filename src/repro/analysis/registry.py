@@ -1,0 +1,85 @@
+"""Rule registry: rules self-register at import, the runner iterates them.
+
+A rule is a class with ``id`` ("JL001"), ``name`` ("recompile-hazard"),
+``severity`` (default for its findings), optional ``paths`` (fnmatch
+patterns restricting which relpaths it inspects; overridable per-repo via
+``[rules.<name>] paths`` in jitlint.toml), and::
+
+    def check(self, mod: ModuleInfo, options: dict) -> Iterator[Finding]
+
+``options`` is the rule's merged jitlint.toml table.  Rules yield findings
+with their own id/name/severity via ``self.finding(...)``.
+"""
+from __future__ import annotations
+
+from fnmatch import fnmatch
+
+from .findings import Finding, Severity
+
+_RULES: dict = {}               # id -> rule instance
+
+
+class Rule:
+    id: str = ""
+    name: str = ""
+    severity: Severity = Severity.ERROR
+    paths: tuple = ()           # () = every file
+
+    def applies_to(self, relpath: str, options: dict) -> bool:
+        patterns = tuple(options.get("paths", self.paths))
+        if not patterns:
+            return True
+        return any(fnmatch(relpath, p) for p in patterns)
+
+    def finding(self, mod, node, message: str, *,
+                severity: Severity | None = None) -> Finding:
+        return Finding(
+            rule_id=self.id, rule_name=self.name,
+            severity=severity or self.severity,
+            path=mod.relpath,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            end_line=getattr(node, "end_lineno", 0) or 0,
+            end_col=getattr(node, "end_col_offset", 0) or 0,
+            message=message)
+
+    def check(self, mod, options: dict):  # pragma: no cover - interface
+        raise NotImplementedError
+        yield
+
+
+def register(cls):
+    """Class decorator: instantiate and index by ID (and reject collisions —
+    two rules sharing an ID would make pragmas ambiguous)."""
+    rule = cls()
+    if not rule.id or not rule.name:
+        raise ValueError(f"rule {cls.__name__} must define id and name")
+    if rule.id in _RULES or any(r.name == rule.name for r in _RULES.values()):
+        raise ValueError(f"duplicate rule id/name: {rule.id} {rule.name}")
+    _RULES[rule.id] = rule
+    return cls
+
+
+def all_rules() -> list:
+    # ensure the built-in rules have registered themselves
+    from . import rules  # noqa: F401
+    return [r for _, r in sorted(_RULES.items())]
+
+
+def get_rule(label: str):
+    from . import rules  # noqa: F401
+    if label in _RULES:
+        return _RULES[label]
+    for r in _RULES.values():
+        if r.name == label:
+            return r
+    raise KeyError(label)
+
+
+def known_labels() -> set:
+    from . import rules  # noqa: F401
+    out = {"*"}
+    for r in _RULES.values():
+        out.add(r.id)
+        out.add(r.name)
+    return out

@@ -1,0 +1,43 @@
+"""Text and JSON rendering of a LintResult."""
+from __future__ import annotations
+
+import json
+
+from .runner import LintResult
+
+JSON_VERSION = 1
+
+
+def render_text(result: LintResult, *, verbose: bool = False) -> str:
+    lines = [f.render() for f in result.findings]
+    if verbose and result.allowed:
+        lines.append("")
+        lines.append("allowlisted (not gating):")
+        lines.extend(f"  {f.render()}  <- {f.allowed_by}"
+                     for f in result.allowed)
+    lines.append(summary_line(result))
+    return "\n".join(lines)
+
+
+def summary_line(result: LintResult) -> str:
+    ne, nw = len(result.errors), len(result.warnings)
+    extras = []
+    if result.allowed:
+        extras.append(f"{len(result.allowed)} allowlisted")
+    if result.suppressed:
+        extras.append(f"{result.suppressed} pragma-suppressed")
+    tail = f" ({', '.join(extras)})" if extras else ""
+    return (f"jitlint: {ne} error(s), {nw} warning(s){tail} "
+            f"across {result.files} file(s)")
+
+
+def to_json(result: LintResult) -> str:
+    return json.dumps({
+        "version": JSON_VERSION,
+        "files_scanned": result.files,
+        "errors": len(result.errors),
+        "warnings": len(result.warnings),
+        "suppressed": result.suppressed,
+        "findings": [f.to_dict() for f in result.findings],
+        "allowed": [f.to_dict() for f in result.allowed],
+    }, indent=1) + "\n"

@@ -1,0 +1,9 @@
+"""Built-in jitlint rules — importing this package registers them all."""
+from . import (  # noqa: F401
+    api_drift,
+    compile_inventory,
+    config_literal,
+    optional_dep,
+    pallas_spec,
+    recompile_hazard,
+)

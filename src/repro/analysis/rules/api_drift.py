@@ -1,0 +1,52 @@
+"""JL003 api-drift: raw ``.cost_analysis()`` access.
+
+``compiled.cost_analysis()`` returned a dict for years, then newer JAX made
+it a list with one dict per executable program — code indexing the old shape
+crashes (or worse, silently reads the wrong program).  PR 1 centralized the
+flattening in ``utils/hlo.normalize_cost_analysis``; this rule pins that
+routing: any ``X.cost_analysis()`` call must appear as the *direct argument*
+of ``normalize_cost_analysis(...)`` (or live in ``utils/hlo.py`` itself,
+which owns the normalization).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import dotted_name
+from ..findings import Severity
+from ..registry import Rule, register
+
+_NORMALIZER = "normalize_cost_analysis"
+_OWNER_SUFFIX = "utils/hlo.py"
+
+
+@register
+class ApiDrift(Rule):
+    id = "JL003"
+    name = "api-drift"
+    severity = Severity.ERROR
+
+    def check(self, mod, options):
+        owner = options.get("owner_suffix", _OWNER_SUFFIX)
+        if mod.relpath.endswith(owner):
+            return
+        wrapped = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) \
+                    and dotted_name(node.func).rsplit(".", 1)[-1] \
+                    == _NORMALIZER:
+                wrapped.update(id(a) for a in node.args)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "cost_analysis"):
+                continue
+            if id(node) in wrapped:
+                continue
+            yield self.finding(
+                mod, node,
+                "raw `.cost_analysis()` access: the return shape drifts "
+                "across JAX versions — route it through "
+                "`utils.hlo.normalize_cost_analysis(compiled."
+                "cost_analysis())`")

@@ -1,0 +1,167 @@
+"""JL006 compile-inventory: the zero-recompile invariant, checked statically.
+
+``benchmarks/serve_bench.py`` asserts zero recompiles after warmup — at
+runtime, after compiling the engine and running a trace.  This rule proves
+the same property's *structure* before anything runs, on any class that owns
+jitted programs (``self.X = jax.jit(...)`` in ``__init__`` — in this repo,
+``serve.engine.ServeEngine``):
+
+  * every program constructor lives in ``__init__`` — a ``jax.jit`` call in
+    any other method mints programs outside the declared inventory;
+  * the class has a ``warmup`` method, and every program that has a runtime
+    call site is also called (directly or through same-class helpers) from
+    ``warmup`` — an unwarmed program compiles on its first real request,
+    which is a latency spike in serving and a hole in the bench's gate;
+  * no array fed to a program takes its shape from ``len(...)`` — a
+    ``np.zeros((len(xs), ...))`` at a program call site keys the compile
+    cache on data cardinality (the exact pre-batch-bucketing bug: one
+    compile per admission-group size).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import dotted_name, is_jit_callable
+from ..findings import Severity
+from ..registry import Rule, register
+
+_ARRAY_CTORS = ("zeros", "ones", "full", "empty")
+
+
+def _jit_value(value: ast.AST) -> ast.Call | None:
+    """The ``jax.jit(...)`` call inside an assigned value, seeing through
+    ``x if cond else None``-style conditional constructors."""
+    candidates = [value]
+    if isinstance(value, ast.IfExp):
+        candidates = [value.body, value.orelse]
+    for c in candidates:
+        if isinstance(c, ast.Call) and is_jit_callable(c.func):
+            return c
+    return None
+
+
+def _self_attr_calls(func: ast.AST) -> set:
+    """Names X for every ``self.X(...)`` call in the function."""
+    out = set()
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == "self":
+            out.add(node.func.attr)
+    return out
+
+
+@register
+class CompileInventory(Rule):
+    id = "JL006"
+    name = "compile-inventory"
+    severity = Severity.ERROR
+
+    def check(self, mod, options):
+        warmup_name = options.get("warmup_method", "warmup")
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(mod, node, warmup_name)
+
+    def _check_class(self, mod, cls: ast.ClassDef, warmup_name: str):
+        methods = {n.name: n for n in cls.body
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        init = methods.get("__init__")
+
+        # -------- program constructors: self.X = jax.jit(...) in __init__
+        programs: dict = {}
+        if init is not None:
+            for stmt in ast.walk(init):
+                if not isinstance(stmt, ast.Assign):
+                    continue
+                call = _jit_value(stmt.value)
+                if call is None:
+                    continue
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Attribute) \
+                            and isinstance(tgt.value, ast.Name) \
+                            and tgt.value.id == "self":
+                        programs[tgt.attr] = stmt
+
+        # -------- jit constructors outside __init__ leak the inventory
+        for name, func in methods.items():
+            if name == "__init__":
+                continue
+            for node in ast.walk(func):
+                if isinstance(node, ast.Call) and is_jit_callable(node.func):
+                    yield self.finding(
+                        mod, node,
+                        f"`jax.jit` inside `{cls.name}.{name}`: program "
+                        f"constructors belong in __init__ so the compiled "
+                        f"inventory is enumerable (and warmable)")
+
+        if not programs:
+            return
+
+        warmup = methods.get(warmup_name)
+        if warmup is None:
+            yield self.finding(
+                mod, cls,
+                f"`{cls.name}` owns jitted programs "
+                f"({', '.join(sorted(programs))}) but has no "
+                f"`{warmup_name}()` to close the compiled inventory")
+            return
+
+        # -------- warmed = programs reachable from warmup via self.* calls
+        warmed: set = set()
+        frontier = [warmup_name]
+        seen = {warmup_name}
+        while frontier:
+            func = methods.get(frontier.pop())
+            if func is None:
+                continue
+            for attr in _self_attr_calls(func):
+                if attr in programs:
+                    warmed.add(attr)
+                elif attr in methods and attr not in seen:
+                    seen.add(attr)
+                    frontier.append(attr)
+
+        # -------- every runtime call site of an unwarmed program is a leak
+        for name, func in methods.items():
+            if name in ("__init__", warmup_name):
+                continue
+            for node in ast.walk(func):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and isinstance(node.func.value, ast.Name) \
+                        and node.func.value.id == "self" \
+                        and node.func.attr in programs \
+                        and node.func.attr not in warmed:
+                    yield self.finding(
+                        mod, node,
+                        f"program `self.{node.func.attr}` is called at "
+                        f"serving time but never from `{warmup_name}()` — "
+                        f"its first real call compiles outside the warmed "
+                        f"inventory")
+
+        # -------- shapes fed to programs must not key on data cardinality
+        for name, func in methods.items():
+            if name == "__init__":
+                continue
+            yield from self._check_len_shapes(mod, cls, name, func)
+
+    def _check_len_shapes(self, mod, cls, name, func):
+        for node in ast.walk(func):
+            if not (isinstance(node, ast.Call)
+                    and dotted_name(node.func).rsplit(".", 1)[-1]
+                    in _ARRAY_CTORS and node.args):
+                continue
+            shape = node.args[0]
+            elts = shape.elts if isinstance(shape, (ast.Tuple, ast.List)) \
+                else [shape]
+            for e in elts:
+                if isinstance(e, ast.Call) and dotted_name(e.func) == "len":
+                    yield self.finding(
+                        mod, e,
+                        f"array shape takes `{mod.segment(e)}` in "
+                        f"`{cls.name}.{name}`: shapes reaching compiled "
+                        f"programs must come from the bucket ladder, not "
+                        f"data cardinality — one compile per distinct "
+                        f"count otherwise")

@@ -1,0 +1,66 @@
+"""JL002 config-literal: hardware-magnitude constants outside accelerators.py.
+
+``mensa.summarize`` once hardcoded a 2e12 peak-FLOPS (PR 1's bug class):
+utilization math silently keyed to one accelerator no matter which config
+was under analysis.  The invariant since then: every peak-FLOPS / bandwidth /
+byte-budget magnitude lives in ``core/accelerators.py`` (or ``configs/``)
+and is *imported*, so a design-point change edits one file.
+
+The rule flags decimal numeric literals in the hardware-magnitude band
+(default |v| in [1e9, 1e15): GB/s bandwidths through hundreds of TFLOP/s)
+in ``src/``, excluding the config homes.  Deliberate blind spots, so the
+band stays quiet enough to gate on:
+
+  * hex/octal/binary literals (bit masks, e.g. ``0x7FFFFFFF``);
+  * exact powers of ten (``1e9``/``1e12`` are unit conversions far more
+    often than they are hardware constants).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import literal_source_is_decimal
+from ..findings import Severity
+from ..registry import Rule, register
+from fnmatch import fnmatch
+
+_DEFAULT_ALLOW = ("src/repro/core/accelerators.py", "src/repro/configs/*")
+
+
+def _is_power_of_ten(v: float) -> bool:
+    while v >= 10 and v == int(v) and int(v) % 10 == 0:
+        v /= 10
+    return v == 1.0
+
+
+@register
+class ConfigLiteral(Rule):
+    id = "JL002"
+    name = "config-literal"
+    severity = Severity.ERROR
+    paths = ("src/*",)
+
+    def check(self, mod, options):
+        lo = float(options.get("min_magnitude", 1e9))
+        hi = float(options.get("max_magnitude", 1e15))
+        allow = tuple(options.get("allow_paths", _DEFAULT_ALLOW))
+        if any(fnmatch(mod.relpath, p) for p in allow):
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Constant):
+                continue
+            v = node.value
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            mag = abs(float(v))
+            if not lo <= mag < hi:
+                continue
+            if _is_power_of_ten(mag):
+                continue
+            if not literal_source_is_decimal(mod, node):
+                continue
+            yield self.finding(
+                mod, node,
+                f"hardware-magnitude literal {v!r}: peak-FLOPS/bandwidth/"
+                f"byte-budget constants belong in core/accelerators.py (or "
+                f"configs/) and get imported from there")

@@ -1,0 +1,82 @@
+"""JL004 optional-dep: hard top-level imports of optional dev dependencies.
+
+A module-level ``import hypothesis`` in any test file kills *collection* of
+the whole module on an environment without the wheel — PR 1's seed state had
+exactly this, and the tier-1 suite reported collection errors instead of
+test results.  The contract (requirements-dev.txt): optional dev deps are
+imported inside a guard, and every property test has a seeded-parametrize
+fallback.
+
+Flags ``import X`` / ``from X import ...`` of configured optional modules
+(default: ``hypothesis``) at module level in test files, unless the import
+sits inside ``try/except ImportError`` (or ``ModuleNotFoundError``) or an
+``if TYPE_CHECKING:`` block.  Function-local imports are fine — they only
+run when the test that needs them runs.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import dotted_name
+from ..findings import Severity
+from ..registry import Rule, register
+
+_DEFAULT_MODULES = ("hypothesis",)
+
+
+def _guarded_by_import_error(handlers) -> bool:
+    for h in handlers:
+        if h.type is None:
+            return True
+        types = h.type.elts if isinstance(h.type, ast.Tuple) else [h.type]
+        for t in types:
+            if dotted_name(t).rsplit(".", 1)[-1] in (
+                    "ImportError", "ModuleNotFoundError", "Exception"):
+                return True
+    return False
+
+
+def _is_type_checking(test: ast.AST) -> bool:
+    return dotted_name(test).rsplit(".", 1)[-1] == "TYPE_CHECKING"
+
+
+@register
+class OptionalDep(Rule):
+    id = "JL004"
+    name = "optional-dep"
+    severity = Severity.ERROR
+    paths = ("tests/*", "*/tests/*")
+
+    def check(self, mod, options):
+        modules = tuple(options.get("modules", _DEFAULT_MODULES))
+        yield from self._scan(mod, mod.tree.body, modules)
+
+    def _scan(self, mod, body, modules, guarded: bool = False):
+        for stmt in body:
+            if isinstance(stmt, (ast.Import, ast.ImportFrom)):
+                if guarded:
+                    continue
+                names = [a.name for a in stmt.names] \
+                    if isinstance(stmt, ast.Import) else [stmt.module or ""]
+                for name in names:
+                    root = name.split(".")[0]
+                    if root in modules:
+                        yield self.finding(
+                            mod, stmt,
+                            f"top-level import of optional dev dependency "
+                            f"`{root}` breaks collection when the wheel is "
+                            f"absent — guard with try/except ImportError or "
+                            f"import inside the test")
+            elif isinstance(stmt, ast.Try):
+                ok = _guarded_by_import_error(stmt.handlers)
+                yield from self._scan(mod, stmt.body, modules,
+                                      guarded=guarded or ok)
+                for h in stmt.handlers:
+                    yield from self._scan(mod, h.body, modules, guarded)
+                yield from self._scan(mod, stmt.orelse, modules, guarded)
+                yield from self._scan(mod, stmt.finalbody, modules, guarded)
+            elif isinstance(stmt, ast.If):
+                ok = _is_type_checking(stmt.test)
+                yield from self._scan(mod, stmt.body, modules,
+                                      guarded=guarded or ok)
+                yield from self._scan(mod, stmt.orelse, modules, guarded)

@@ -1,0 +1,242 @@
+"""JL005 pallas-spec: grid/BlockSpec discipline in ``kernels/``.
+
+Pallas failure modes this repo has to re-learn the hard way every time they
+ship: an ``index_map`` whose arity silently disagrees with the grid (lambdas
+are not arity-checked until trace time, and under interpret mode some
+mismatches "work"), a grid built with ``//`` that drops the array's
+remainder rows, and scalar-prefetch operands miscounted against the kernel
+signature.  All three are statically visible in the call expression:
+
+  * **index-map arity** — every ``BlockSpec`` index_map lambda must take
+    ``len(grid)`` args, plus ``num_scalar_prefetch`` trailing refs under
+    ``pltpu.PrefetchScalarGridSpec`` (the prefetch operands are appended to
+    the index-map signature).
+  * **dropped remainder** — a grid element ``X // b`` needs a divisibility
+    guard (an ``assert`` mentioning ``% b``) in the enclosing function;
+    ``pl.cdiv(X, b)``-shaped elements need masking in the kernel body
+    (``pl.when`` / ``jnp.where`` / an iota-based bound check) since the last
+    block runs past the array.
+  * **scalar-prefetch arity** — the kernel function must take exactly
+    ``num_scalar_prefetch + len(in_specs) + n_out + len(scratch_shapes)``
+    refs, and the pallas_call invocation must pass
+    ``num_scalar_prefetch + len(in_specs)`` operands (scalars first).
+
+Checks only fire when the relevant expressions are statically literal
+(tuple grids, list in_specs, same-module kernel defs) — anything dynamic is
+skipped, not guessed at.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import FunctionNode, dotted_name, enclosing_function
+from ..findings import Severity
+from ..registry import Rule, register
+
+_MASK_MARKERS = ("when", "where", "iota", "broadcasted_iota")
+
+
+def _bare(node: ast.AST) -> str:
+    return dotted_name(node).rsplit(".", 1)[-1]
+
+
+def _kwarg(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve_name(mod, scope: ast.AST | None, name: str):
+    """Find ``name = <expr>`` in the scope body (else module body)."""
+    bodies = []
+    if scope is not None:
+        bodies.append(scope.body)
+    bodies.append(mod.tree.body)
+    for body in bodies:
+        for stmt in body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and stmt.targets[0].id == name:
+                return stmt.value
+    return None
+
+
+def _as_spec_list(node) -> list | None:
+    if node is None:
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+def _is_cdiv(node: ast.AST) -> bool:
+    """``pl.cdiv(x, b)`` or the ``-(-x // b)`` ceil-div idiom."""
+    if isinstance(node, ast.Call) and _bare(node.func) == "cdiv":
+        return True
+    return (isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub)
+            and isinstance(node.operand, ast.BinOp)
+            and isinstance(node.operand.op, ast.FloorDiv))
+
+
+def _mod_guard_names(func: ast.AST | None) -> set:
+    """Names appearing on either side of a ``%`` inside an assert test."""
+    out: set = set()
+    if func is None:
+        return out
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Assert):
+            continue
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod):
+                for side in (sub.left, sub.right):
+                    if isinstance(side, ast.Name):
+                        out.add(side.id)
+    return out
+
+
+def _kernel_def(mod, scope, kernel_expr):
+    """Resolve the pallas_call kernel operand to (FunctionDef, n_bound):
+    a bare name, or ``functools.partial(name, ...)`` with keyword bindings."""
+    bound = 0
+    target = kernel_expr
+    if isinstance(target, ast.Call) \
+            and _bare(target.func) == "partial" and target.args:
+        bound = len(target.args) - 1      # positionally-bound params
+        target = target.args[0]
+    if isinstance(target, ast.Name):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, FunctionNode) and node.name == target.id:
+                return node, bound
+    return None, bound
+
+
+@register
+class PallasSpec(Rule):
+    id = "JL005"
+    name = "pallas-spec"
+    severity = Severity.ERROR
+    paths = ("*kernels/*",)
+
+    def check(self, mod, options):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) \
+                    and _bare(node.func) == "pallas_call":
+                yield from self._check_call(mod, node)
+
+    # ------------------------------------------------------------ plumbing
+    def _check_call(self, mod, call: ast.Call):
+        scope = enclosing_function(mod, call)
+        grid = _kwarg(call, "grid")
+        prefetch = 0
+        spec_src = call                   # where in/out/scratch kwargs live
+        grid_spec = _kwarg(call, "grid_spec")
+        if grid_spec is not None:
+            if isinstance(grid_spec, ast.Name):
+                grid_spec = _resolve_name(mod, scope, grid_spec.id)
+            if isinstance(grid_spec, ast.Call):
+                spec_src = grid_spec
+                grid = _kwarg(grid_spec, "grid")
+                if _bare(grid_spec.func) == "PrefetchScalarGridSpec":
+                    n = _kwarg(grid_spec, "num_scalar_prefetch")
+                    if isinstance(n, ast.Constant) \
+                            and isinstance(n.value, int):
+                        prefetch = n.value
+            else:
+                return                    # dynamic grid_spec: nothing to say
+
+        in_specs = _as_spec_list(_kwarg(spec_src, "in_specs"))
+        out_specs = _as_spec_list(_kwarg(spec_src, "out_specs"))
+        scratch = _as_spec_list(_kwarg(spec_src, "scratch_shapes")) or []
+
+        rank = len(grid.elts) if isinstance(grid, (ast.Tuple, ast.List)) \
+            else None
+        if rank is not None:
+            yield from self._check_index_maps(
+                mod, in_specs, out_specs, rank, prefetch)
+            yield from self._check_grid_division(mod, call, scope, grid)
+        yield from self._check_arity(mod, call, scope, prefetch,
+                                     in_specs, out_specs, scratch)
+
+    # ------------------------------------------------- index-map arity
+    def _check_index_maps(self, mod, in_specs, out_specs, rank, prefetch):
+        want = rank + prefetch
+        for spec in (in_specs or []) + (out_specs or []):
+            if not (isinstance(spec, ast.Call)
+                    and _bare(spec.func) == "BlockSpec"):
+                continue
+            index_map = _kwarg(spec, "index_map")
+            if index_map is None and len(spec.args) >= 2:
+                index_map = spec.args[1]
+            if not isinstance(index_map, ast.Lambda):
+                continue                  # memory_space-only or indirect
+            # default args are closure captures (`lambda h, i, j, g=group:`),
+            # never filled by the grid — only non-default args must match
+            total = len(index_map.args.args)
+            required = total - len(index_map.args.defaults)
+            if not required <= want <= total:
+                yield self.finding(
+                    mod, index_map,
+                    f"BlockSpec index_map takes {required} arg(s) but the "
+                    f"grid has rank {rank}"
+                    + (f" plus {prefetch} scalar-prefetch ref(s)"
+                       if prefetch else "")
+                    + f" — expected {want}")
+
+    # --------------------------------------------- remainder discipline
+    def _check_grid_division(self, mod, call, scope, grid):
+        guards = _mod_guard_names(scope)
+        kernel_def, _ = _kernel_def(mod, scope, call.args[0]) \
+            if call.args else (None, 0)
+        masked = kernel_def is not None and any(
+            _bare(n.func) in _MASK_MARKERS
+            for n in ast.walk(kernel_def) if isinstance(n, ast.Call))
+        for elt in grid.elts:
+            if isinstance(elt, ast.BinOp) \
+                    and isinstance(elt.op, ast.FloorDiv) \
+                    and isinstance(elt.right, ast.Name):
+                if elt.right.id not in guards and not masked:
+                    yield self.finding(
+                        mod, elt,
+                        f"grid element `{mod.segment(elt)}` floor-divides "
+                        f"without an `assert ... % {elt.right.id} == 0` "
+                        f"guard or in-kernel masking — remainder rows are "
+                        f"silently dropped")
+            elif _is_cdiv(elt) and kernel_def is not None and not masked:
+                yield self.finding(
+                    mod, elt,
+                    f"ceil-div grid element `{mod.segment(elt)}` overruns "
+                    f"the array on the last block but the kernel has no "
+                    f"masking guard (pl.when / jnp.where / iota bound)")
+
+    # ------------------------------------------- scalar-prefetch arity
+    def _check_arity(self, mod, call, scope, prefetch, in_specs, out_specs,
+                     scratch):
+        if in_specs is None:
+            return
+        n_out = len(out_specs) if out_specs is not None else 1
+        want_refs = prefetch + len(in_specs) + n_out + len(scratch)
+        kernel_def, bound = _kernel_def(mod, scope, call.args[0]) \
+            if call.args else (None, 0)
+        if kernel_def is not None:
+            a = kernel_def.args
+            has_var = a.vararg is not None
+            got = len(a.posonlyargs) + len(a.args) - bound
+            if not has_var and got != want_refs:
+                yield self.finding(
+                    mod, call,
+                    f"kernel `{kernel_def.name}` takes {got} ref(s) but the "
+                    f"specs provide {want_refs} ({prefetch} scalar-prefetch "
+                    f"+ {len(in_specs)} in + {n_out} out + {len(scratch)} "
+                    f"scratch) — scalar-prefetch operands come first")
+        parent = mod.parent(call)
+        if isinstance(parent, ast.Call) and parent.func is call \
+                and not any(isinstance(a, ast.Starred) for a in parent.args):
+            got = len(parent.args)
+            want = prefetch + len(in_specs)
+            if got != want:
+                yield self.finding(
+                    mod, parent,
+                    f"pallas_call invocation passes {got} operand(s) but "
+                    f"the specs expect {want} ({prefetch} scalar-prefetch "
+                    f"first, then {len(in_specs)} inputs)")

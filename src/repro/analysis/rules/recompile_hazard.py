@@ -1,0 +1,154 @@
+"""JL001 recompile-hazard: trace-time concretization and per-call programs.
+
+Inside jit-reachable functions (see ``astutil.jit_reachability``):
+
+  * ``x.item()`` — concretizes a traced value; at best a device sync, at
+    trace time a ``ConcretizationTypeError`` waiting for the right input.
+  * ``int(x)`` / ``float(x)`` / ``bool(x)`` on a non-literal — same failure
+    mode, the form that actually bit PR 1's bucketing path.
+  * ``if``/``while`` on a ``.shape``-derived expression — legal (shapes are
+    static) but every distinct shape now mints a distinct program; in the
+    serving hot path that is exactly the unbounded-inventory bug the bucket
+    ladder exists to prevent.  WARNING severity: it gates only --strict.
+
+Anywhere in the module (reachability not required):
+
+  * ``jax.jit(f)(args)`` — the wrapper (and its compile cache) dies with the
+    expression, so every execution recompiles.
+  * ``jax.jit(<lambda or locally-defined function>)`` inside a function
+    body — a fresh callable per call means a fresh cache key per call.
+  * passing a ``list``/``dict``/``set`` literal for a known static argname —
+    unhashable static args raise at call time on newer JAX and silently
+    defeat caching on older.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import (FunctionNode, dotted_name, enclosing_function,
+                       is_jit_callable, jit_reachability, jit_static_argnames,
+                       unwrap_partial)
+from ..findings import Severity
+from ..registry import Rule, register
+
+_CASTS = ("int", "float", "bool")
+
+
+def _is_safe_cast_arg(arg: ast.AST) -> bool:
+    """Casts of literals and of host-side ``len(...)`` are not hazards."""
+    if isinstance(arg, ast.Constant):
+        return True
+    if isinstance(arg, ast.Call) and dotted_name(arg.func) == "len":
+        return True
+    return False
+
+
+def _mentions_shape(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Attribute) and n.attr == "shape"
+               for n in ast.walk(node))
+
+
+@register
+class RecompileHazard(Rule):
+    id = "JL001"
+    name = "recompile-hazard"
+    severity = Severity.ERROR
+
+    def check(self, mod, options):
+        reach = jit_reachability(mod)
+
+        for name in sorted(reach.reachable):
+            for func in reach.functions.get(name, []):
+                yield from self._check_traced_body(mod, func)
+
+        yield from self._check_jit_sites(mod, reach)
+        yield from self._check_static_args(mod, reach)
+
+    # ------------------------------------------------ traced-value hazards
+    def _check_traced_body(self, mod, func):
+        for node in ast.walk(func):
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args:
+                    yield self.finding(
+                        mod, node,
+                        f"`.item()` inside jit-reachable `{func.name}` "
+                        f"concretizes a traced value (sync or trace error)")
+                elif isinstance(node.func, ast.Name) \
+                        and node.func.id in _CASTS \
+                        and len(node.args) == 1 and not node.keywords \
+                        and not _is_safe_cast_arg(node.args[0]):
+                    yield self.finding(
+                        mod, node,
+                        f"`{node.func.id}(...)` on a non-literal inside "
+                        f"jit-reachable `{func.name}` concretizes a traced "
+                        f"value; hoist it to the host side of the call")
+            elif isinstance(node, (ast.If, ast.While)) \
+                    and _mentions_shape(node.test):
+                yield self.finding(
+                    mod, node.test,
+                    f"branch on `.shape` inside jit-reachable `{func.name}`: "
+                    f"every distinct shape mints a distinct compiled "
+                    f"program — route shapes through the bucket ladder",
+                    severity=Severity.WARNING)
+
+    # -------------------------------------------------- per-call jit mints
+    def _check_jit_sites(self, mod, reach):
+        for call in reach.jit_calls:
+            parent = mod.parent(call)
+            if isinstance(parent, ast.Call) and parent.func is call:
+                yield self.finding(
+                    mod, call,
+                    "`jax.jit(f)(...)` builds a fresh wrapper per call — its "
+                    "compile cache dies with the expression; bind the jitted "
+                    "function once and reuse it")
+            if not call.args:
+                continue
+            target = call.args[0]
+            inner = unwrap_partial(target) if isinstance(target, ast.Call) \
+                else None
+            candidate = inner if inner is not None else target
+            if enclosing_function(mod, call) is None:
+                continue                     # module-level binding: built once
+            if isinstance(candidate, ast.Lambda):
+                yield self.finding(
+                    mod, call,
+                    "`jax.jit` over a lambda inside a function body mints a "
+                    "fresh cache key per call (program-inventory leak)")
+            elif isinstance(candidate, ast.Name):
+                func = enclosing_function(mod, call)
+                local_defs = {n.name for n in ast.walk(func)
+                              if isinstance(n, FunctionNode)}
+                if candidate.id in local_defs:
+                    yield self.finding(
+                        mod, call,
+                        f"`jax.jit({candidate.id})` over a function defined "
+                        f"in the enclosing body mints a fresh cache key per "
+                        f"call (program-inventory leak)")
+
+    # --------------------------------------------- unhashable static args
+    def _check_static_args(self, mod, reach):
+        statics = {}
+        for name, funcs in reach.functions.items():
+            for func in funcs:
+                argnames = jit_static_argnames(func)
+                if argnames:
+                    statics[name] = argnames
+        if not statics:
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            bare = dotted_name(node.func).rsplit(".", 1)[-1]
+            declared = statics.get(bare)
+            if not declared:
+                continue
+            for kw in node.keywords:
+                if kw.arg in declared \
+                        and isinstance(kw.value,
+                                       (ast.List, ast.Dict, ast.Set)):
+                    yield self.finding(
+                        mod, kw.value,
+                        f"unhashable {type(kw.value).__name__.lower()} "
+                        f"literal for static argname `{kw.arg}` of "
+                        f"`{bare}` — every call re-traces (use a tuple)")

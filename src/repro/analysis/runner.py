@@ -1,0 +1,127 @@
+"""File discovery + rule execution + pragma/allowlist resolution."""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .astutil import ModuleInfo
+from .config import LintConfig
+from .findings import Finding, Severity
+from .registry import all_rules, known_labels
+
+# runner-level findings (parse errors, stale pragmas) use the reserved JL000
+_META_RULE = ("JL000", "jitlint")
+
+
+@dataclass
+class LintResult:
+    findings: list = field(default_factory=list)     # active (gate) findings
+    allowed: list = field(default_factory=list)      # absorbed by allowlist
+    suppressed: int = 0                              # absorbed by pragmas
+    files: int = 0
+
+    @property
+    def errors(self) -> list:
+        return [f for f in self.findings if f.severity is Severity.ERROR]
+
+    @property
+    def warnings(self) -> list:
+        return [f for f in self.findings if f.severity is Severity.WARNING]
+
+    def exit_code(self, strict: bool = False) -> int:
+        if self.errors:
+            return 1
+        if strict and self.warnings:
+            return 1
+        return 0
+
+
+def discover(paths, root: Path, config: LintConfig) -> list:
+    """Python files under ``paths``, as (abspath, relpath) pairs, with the
+    config's excludes applied."""
+    out = []
+    seen = set()
+    for raw in paths:
+        p = Path(raw)
+        if not p.is_absolute():
+            p = root / p
+        files = [p] if p.is_file() else sorted(p.rglob("*.py"))
+        for f in files:
+            f = f.resolve()
+            if f in seen or f.suffix != ".py":
+                continue
+            seen.add(f)
+            try:
+                rel = f.relative_to(root.resolve()).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            if config.excluded(rel):
+                continue
+            out.append((f, rel))
+    return out
+
+
+def _meta_finding(relpath: str, line: int, message: str) -> Finding:
+    return Finding(rule_id=_META_RULE[0], rule_name=_META_RULE[1],
+                   severity=Severity.ERROR, path=relpath, line=line, col=0,
+                   message=message)
+
+
+def lint_paths(paths, *, root: str | Path = ".",
+               config: LintConfig | None = None,
+               rules=None) -> LintResult:
+    root = Path(root)
+    config = config or LintConfig()
+    rules = list(rules) if rules is not None else all_rules()
+    labels = known_labels()
+    result = LintResult()
+
+    for path, relpath in discover(paths, root, config):
+        try:
+            mod = ModuleInfo.parse(path, relpath)
+        except SyntaxError as e:
+            result.findings.append(_meta_finding(
+                relpath, e.lineno or 1, f"syntax error: {e.msg}"))
+            result.files += 1
+            continue
+        result.files += 1
+        if mod.pragmas.skip_file:
+            continue
+
+        for label, line in sorted(mod.pragmas.labels.items()):
+            if label not in labels:
+                result.findings.append(_meta_finding(
+                    relpath, line,
+                    f"pragma names unknown rule `{label}` — it suppresses "
+                    f"nothing (known: IDs JL001..JL006 or rule names)"))
+
+        raw: list = []
+        for rule in rules:
+            options = config.options_for(rule.name)
+            if not rule.applies_to(relpath, options):
+                continue
+            raw.extend(rule.check(mod, options))
+
+        for f in raw:
+            if mod.pragmas.suppresses(f.line, f.rule_id, f.rule_name):
+                result.suppressed += 1
+                continue
+            entry = config.allowed_by(f)
+            if entry is not None:
+                result.allowed.append(Finding(
+                    **{**f.__dict__, "allowed_by": entry.describe()}))
+                continue
+            result.findings.append(f)
+
+    result.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule_id))
+    result.allowed.sort(key=lambda f: (f.path, f.line, f.col, f.rule_id))
+    return result
+
+
+def parse_ok(source: str) -> bool:  # pragma: no cover - debugging helper
+    try:
+        ast.parse(source)
+        return True
+    except SyntaxError:
+        return False

@@ -77,6 +77,26 @@ JACQUARD = AcceleratorConfig(
 
 MENSA_ACCELERATORS = (PASCAL, PAVLOV, JACQUARD)
 
+
+# ----------------------------------------------------------------- host chips
+# Level-B Mensa maps execution strategies onto a TPU pod instead of the
+# paper's edge ASICs; these are the datacenter-chip magnitudes its analytic
+# cost models (core/strategy.py) and the roofline bench divide by.  Every
+# peak-FLOPS / bandwidth / byte-budget constant in the repo lives either
+# here or in configs/ — jitlint's config-literal rule (JL002) enforces it.
+@dataclass(frozen=True)
+class HostChipConfig:
+    """A datacenter accelerator chip as the analytic cost models see it."""
+    name: str
+    peak_flops: float          # bf16 FLOP/s per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per ICI link
+    hbm_budget: float          # usable bytes/chip for params + optimizer
+
+
+TPU_V5E = HostChipConfig(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                         ici_bw=50e9, hbm_budget=12e9)
+
 # cluster -> designated Mensa accelerator (paper §5.2)
 CLUSTER_TO_ACCELERATOR = {1: PASCAL, 2: PASCAL, 3: PAVLOV, 4: JACQUARD, 5: JACQUARD}
 

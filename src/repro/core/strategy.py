@@ -28,14 +28,15 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from ..models.model_config import ArchConfig
+from .accelerators import TPU_V5E
 from .characterize import characterize_layer
 from .clustering import rule_cluster
 from .layerspec import LayerKind, LayerSpec
 
-# v5e constants (per chip)
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+# v5e constants (per chip) — magnitudes live in core/accelerators.py (JL002)
+PEAK_FLOPS = TPU_V5E.peak_flops
+HBM_BW = TPU_V5E.hbm_bw
+ICI_BW = TPU_V5E.ici_bw
 BYTES = 2.0  # bf16
 
 
@@ -119,7 +120,7 @@ def _block_specs(cfg: ArchConfig, tokens: int, batch: int) -> list[tuple[str, La
     return out
 
 
-HBM_BUDGET = 12e9       # usable bytes/chip for parameters+optimizer
+HBM_BUDGET = TPU_V5E.hbm_budget   # usable bytes/chip for params+optimizer
 
 
 def _ring_allreduce_wire(bytes_per_participant: float, group: int) -> float:

@@ -1,0 +1,12 @@
+"""Seeded JL003 violations: raw `.cost_analysis()` access.
+
+Never executed — parsed by tests/test_analysis.py only.
+"""
+from repro.utils.hlo import normalize_cost_analysis
+
+
+def probe(compiled):
+    cost = compiled.cost_analysis()                        # expect[JL003]
+    flops = compiled.cost_analysis()["flops"]              # expect[JL003]
+    ok = normalize_cost_analysis(compiled.cost_analysis())  # routed: clean
+    return cost, flops, ok

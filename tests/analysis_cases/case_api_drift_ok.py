@@ -1,0 +1,9 @@
+"""Pragma-suppressed twin of case_api_drift.py — must lint clean."""
+from repro.utils.hlo import normalize_cost_analysis
+
+
+def probe(compiled):
+    cost = compiled.cost_analysis()                        # jitlint: ignore[JL003]
+    flops = compiled.cost_analysis()["flops"]              # jitlint: ignore[api-drift]
+    ok = normalize_cost_analysis(compiled.cost_analysis())
+    return cost, flops, ok

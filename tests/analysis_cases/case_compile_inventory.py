@@ -1,0 +1,57 @@
+"""Seeded JL006 violations: compile-inventory drift in an engine-like class.
+
+Never executed — parsed by tests/test_analysis.py only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LeakyEngine:
+    """Warms _decode but not _prefill; also jits and allocates in methods."""
+
+    def __init__(self, model):
+        self._decode = jax.jit(model.decode)
+        self._prefill = jax.jit(model.prefill)
+
+    def warmup(self, tokens):
+        self._decode(tokens)
+
+    def step(self, tokens, prompts):
+        out = self._decode(tokens)
+        first = self._prefill(prompts)                   # expect[JL006]
+        late = jax.jit(self._post)                       # expect[JL006]
+        batch = np.zeros((len(prompts), 4))              # expect[JL006]
+        return first, late(out), batch
+
+    def _post(self, t):
+        return t
+
+
+class NeverWarmed:                                       # expect[JL006]
+    """Builds jitted programs but has no warmup() at all."""
+
+    def __init__(self, model):
+        self._decode = jax.jit(model.decode)
+
+    def step(self, tokens):
+        return self._decode(tokens)
+
+
+class CleanEngine:
+    """Every program is warmed, directly or through a helper — no findings."""
+
+    def __init__(self, model):
+        self._decode = jax.jit(model.decode)
+        self._prefill = jax.jit(model.prefill)
+
+    def warmup(self, tokens, prompts):
+        self._decode(tokens)
+        self._warm_prefill(prompts)
+
+    def _warm_prefill(self, prompts):
+        self._prefill(prompts)
+
+    def step(self, tokens, prompts):
+        pad = jnp.zeros((8, 4))
+        return self._decode(tokens), self._prefill(prompts), pad

@@ -1,0 +1,31 @@
+"""Pragma-suppressed twin of case_compile_inventory.py — must lint clean."""
+import jax
+import numpy as np
+
+
+class LeakyEngine:
+    def __init__(self, model):
+        self._decode = jax.jit(model.decode)
+        self._prefill = jax.jit(model.prefill)
+
+    def warmup(self, tokens):
+        self._decode(tokens)
+
+    def step(self, tokens, prompts):
+        out = self._decode(tokens)
+        first = self._prefill(prompts)                   # jitlint: ignore[JL006]
+        late = jax.jit(self._post)                       # jitlint: ignore[compile-inventory]
+        # jitlint: ignore[JL006]
+        batch = np.zeros((len(prompts), 4))
+        return first, late(out), batch
+
+    def _post(self, t):
+        return t
+
+
+class NeverWarmed:                                       # jitlint: ignore[JL006]
+    def __init__(self, model):
+        self._decode = jax.jit(model.decode)
+
+    def step(self, tokens):
+        return self._decode(tokens)

@@ -1,0 +1,22 @@
+"""Seeded JL002 violations: hardware-magnitude literals outside accelerators.
+
+Never executed — parsed by tests/test_analysis.py only (with the rule's
+`paths` widened to see this directory).
+"""
+
+PEAK_FLOPS = 123e12                 # expect[JL002]
+HBM_BW = 819e9                      # expect[JL002]
+DRAM_BYTES = 34_359_738_368         # expect[JL002]
+
+
+def utilization(flops: float) -> float:
+    return flops / 456e9            # expect[JL002]
+
+
+# --- below the band, powers of ten, or non-decimal: no findings ---
+SMALL = 5e6
+UNIT_GIGA = 1e9
+UNIT_TERA = 1e12
+SEED_MASK = 0x7FFFFFFF
+TINY = 1e-30
+BIG_SENTINEL = 1e30

@@ -1,0 +1,9 @@
+"""Pragma-suppressed twin of case_config_literal.py — must lint clean."""
+
+PEAK_FLOPS = 123e12                 # jitlint: ignore[JL002]
+HBM_BW = 819e9                      # jitlint: ignore[config-literal]
+DRAM_BYTES = 34_359_738_368         # jitlint: ignore[JL002]
+
+
+def utilization(flops: float) -> float:
+    return flops / 456e9            # jitlint: ignore[JL002]

@@ -1,0 +1,23 @@
+"""Seeded JL004 violations: hard top-level optional-dep imports.
+
+Never executed — parsed by tests/test_analysis.py only.  Lives under
+tests/ so the rule's default `tests/*` path filter applies to it.
+"""
+from typing import TYPE_CHECKING
+
+import hypothesis                                  # expect[JL004]
+from hypothesis import given                       # expect[JL004]
+from hypothesis.strategies import integers         # expect[JL004]
+
+try:
+    import hypothesis as hyp_guarded               # guarded: clean
+except ImportError:
+    hyp_guarded = None
+
+if TYPE_CHECKING:
+    from hypothesis import settings                # type-only: clean
+
+
+def test_property():
+    from hypothesis import strategies              # function-local: clean
+    return strategies, given, integers, hypothesis, hyp_guarded

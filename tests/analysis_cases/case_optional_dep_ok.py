@@ -1,0 +1,10 @@
+"""Pragma-suppressed twin of case_optional_dep.py — must lint clean."""
+
+import hypothesis                                  # jitlint: ignore[JL004]
+from hypothesis import given                       # jitlint: ignore[optional-dep]
+# jitlint: ignore[JL004]
+from hypothesis.strategies import integers
+
+
+def test_property():
+    return given, integers, hypothesis

@@ -1,0 +1,107 @@
+"""Seeded JL005 violations: Pallas grid/BlockSpec discipline.
+
+Never executed — parsed by tests/test_analysis.py only (with the rule's
+`paths` widened to see this directory).
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _plain_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def _prefetch_kernel(table_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _masked_kernel(x_ref, o_ref, *, m: int, block: int):
+    i = pl.program_id(0)
+    pos = i * block + jax.lax.iota(jnp.int32, block)
+    o_ref[...] = jnp.where(pos < m, x_ref[...] * 2, 0)
+
+
+def bad_index_map_arity(x, block):
+    m, n = x.shape
+    assert m % block == 0 and n % block == 0
+    return pl.pallas_call(
+        _plain_kernel,
+        grid=(m // block, n // block),
+        in_specs=[
+            pl.BlockSpec((block, block),
+                         lambda i: (i, 0)),              # expect[JL005]
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+    )(x)
+
+
+def dropped_remainder(x, block):
+    (m,) = x.shape
+    return pl.pallas_call(
+        _plain_kernel,
+        grid=(m // block,),                              # expect[JL005]
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+    )(x)
+
+
+def overrun_tail_unmasked(x, block):
+    (m,) = x.shape
+    return pl.pallas_call(
+        _plain_kernel,
+        grid=(pl.cdiv(m, block),),                       # expect[JL005]
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+    )(x)
+
+
+def bad_prefetch_kernel_arity(x, table, block):
+    (m,) = x.shape
+    assert m % block == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i, tbl: (tbl[i],))],
+        out_specs=pl.BlockSpec((block,), lambda i, tbl: (i,)),
+        scratch_shapes=[pltpu.VMEM((block,), jnp.float32)],
+    )
+    return pl.pallas_call(                               # expect[JL005]
+        _prefetch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+    )(table, x)
+
+
+def bad_operand_count(x, table, block):
+    (m,) = x.shape
+    assert m % block == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i, tbl: (tbl[i],))],
+        out_specs=pl.BlockSpec((block,), lambda i, tbl: (i,)),
+    )
+    return pl.pallas_call(                               # expect[JL005]
+        _prefetch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+    )(x)
+
+
+def clean_masked_tail(x, block):
+    # ceil-div grid + in-kernel masking + closure-captured index-map default:
+    # the disciplined form, no findings
+    import functools
+    (m,) = x.shape
+    return pl.pallas_call(
+        functools.partial(_masked_kernel, m=m, block=block),
+        grid=(pl.cdiv(m, block),),
+        in_specs=[pl.BlockSpec((block,), lambda i, b=block: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+    )(x)

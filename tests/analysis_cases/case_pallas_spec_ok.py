@@ -1,0 +1,57 @@
+"""Pragma-suppressed twin of case_pallas_spec.py — must lint clean."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _plain_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def _prefetch_kernel(table_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_index_map_arity(x, block):
+    m, n = x.shape
+    assert m % block == 0 and n % block == 0
+    return pl.pallas_call(
+        _plain_kernel,
+        grid=(m // block, n // block),
+        in_specs=[
+            pl.BlockSpec((block, block),
+                         lambda i: (i, 0)),              # jitlint: ignore[JL005]
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+    )(x)
+
+
+def dropped_remainder(x, block):
+    (m,) = x.shape
+    return pl.pallas_call(
+        _plain_kernel,
+        grid=(m // block,),                              # jitlint: ignore[pallas-spec]
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+    )(x)
+
+
+def bad_prefetch_kernel_arity(x, table, block):
+    (m,) = x.shape
+    assert m % block == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i, tbl: (tbl[i],))],
+        out_specs=pl.BlockSpec((block,), lambda i, tbl: (i,)),
+        scratch_shapes=[pltpu.VMEM((block,), jnp.float32)],
+    )
+    # jitlint: ignore[JL005]
+    return pl.pallas_call(
+        _prefetch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+    )(table, x)

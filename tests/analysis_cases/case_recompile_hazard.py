@@ -1,0 +1,62 @@
+"""Seeded JL001 violations: trace-time concretization + per-call programs.
+
+Never executed — parsed by tests/test_analysis.py only.
+"""
+from functools import partial
+
+import jax
+
+
+@jax.jit
+def decode_step(x, position):
+    n = int(position)                          # expect[JL001]
+    scale = float(x.mean())                    # expect[JL001]
+    flag = bool(x.any())                       # expect[JL001]
+    host = x.item()                            # expect[JL001]
+    if x.shape[0] > 4:                         # expect[JL001]
+        x = x * 2
+    return x + n + scale + flag + host
+
+
+def helper_called_from_jit(y):
+    # reachable: decode_bridge below is passed to jax.jit and calls this
+    return y.item()                            # expect[JL001]
+
+
+def decode_bridge(y):
+    return helper_called_from_jit(y)
+
+
+_bridge = jax.jit(decode_bridge)
+
+
+@partial(jax.jit, static_argnames=("widths",))
+def bucketed(x, widths=(8, 16)):
+    return x[: widths[0]]
+
+
+def not_reachable(z):
+    # identical body, but nothing jit-reachable calls it: must NOT fire
+    return z.item()
+
+
+def serve_once(fn, x):
+    out = jax.jit(fn)(x)                       # expect[JL001]
+    lam = jax.jit(lambda t: t + 1)             # expect[JL001]
+
+    def local_step(t):
+        return t * 2
+
+    prog = jax.jit(local_step)                 # expect[JL001]
+    return out, lam(x), prog(x)
+
+
+def caller(x):
+    return bucketed(x, widths=[8, 16])         # expect[JL001]
+
+
+MODULE_LEVEL = jax.jit(lambda t: t)            # module-level lambda: built once
+
+
+def safe_casts(xs):
+    return int(len(xs)) + float(3) + bool(0)   # literals / len: no finding

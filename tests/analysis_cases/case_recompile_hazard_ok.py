@@ -1,0 +1,52 @@
+"""Pragma-suppressed twin of case_recompile_hazard.py — must lint clean.
+
+Exercises every suppression spelling: rule ID, rule name, comma lists,
+same-line and line-above placement, and `*`.
+"""
+from functools import partial
+
+import jax
+
+
+@jax.jit
+def decode_step(x, position):
+    n = int(position)                          # jitlint: ignore[JL001]
+    scale = float(x.mean())                    # jitlint: ignore[recompile-hazard]
+    flag = bool(x.any())                       # jitlint: ignore[JL001, JL002]
+    # jitlint: ignore[JL001]
+    host = x.item()
+    if x.shape[0] > 4:                         # jitlint: ignore[*]
+        x = x * 2
+    return x + n + scale + flag + host
+
+
+def helper_called_from_jit(y):
+    return y.item()                            # jitlint: ignore[JL001]
+
+
+def decode_bridge(y):
+    return helper_called_from_jit(y)
+
+
+_bridge = jax.jit(decode_bridge)
+
+
+@partial(jax.jit, static_argnames=("widths",))
+def bucketed(x, widths=(8, 16)):
+    return x[: widths[0]]
+
+
+def serve_once(fn, x):
+    out = jax.jit(fn)(x)                       # jitlint: ignore[JL001]
+    lam = jax.jit(lambda t: t + 1)             # jitlint: ignore[recompile-hazard]
+
+    def local_step(t):
+        return t * 2
+
+    # jitlint: ignore[JL001]
+    prog = jax.jit(local_step)
+    return out, lam(x), prog(x)
+
+
+def caller(x):
+    return bucketed(x, widths=[8, 16])         # jitlint: ignore[JL001]

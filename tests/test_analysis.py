@@ -1,0 +1,214 @@
+"""Tests for the jitlint static-analysis suite (src/repro/analysis).
+
+Each seeded-violation file under tests/analysis_cases/ carries
+``# expect[JLxxx]`` markers on the exact lines where findings must anchor;
+its ``*_ok.py`` twin seeds the same violations behind pragmas and must lint
+clean.  These tests are stdlib-only (no jax import) — the corpus is parsed,
+never executed.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    LintConfig,
+    get_rule,
+    lint_paths,
+    load_config,
+)
+from repro.analysis.config import AllowEntry
+from repro.analysis.findings import Severity
+
+REPO = Path(__file__).resolve().parent.parent
+CASES = REPO / "tests" / "analysis_cases"
+
+# config-literal and pallas-spec restrict themselves to src/* and *kernels/*
+# respectively; widen them so they can see their corpus file.
+CASE_OPTIONS = {
+    "case_config_literal": {"config-literal": {"paths": ["*"]}},
+    "case_pallas_spec": {"pallas-spec": {"paths": ["*"]}},
+}
+
+VIOLATION_CASES = [
+    "case_recompile_hazard",
+    "case_config_literal",
+    "case_api_drift",
+    "case_optional_dep",
+    "case_pallas_spec",
+    "case_compile_inventory",
+]
+
+_MARKER_RE = re.compile(r"#\s*expect\[(JL\d{3})\]")
+
+
+def _markers(path: Path) -> set:
+    out = set()
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        for m in _MARKER_RE.finditer(line):
+            out.add((lineno, m.group(1)))
+    return out
+
+
+def _lint_case(stem: str):
+    path = CASES / f"{stem}.py"
+    config = LintConfig(rule_options=dict(CASE_OPTIONS.get(
+        stem.removesuffix("_ok"), {})))
+    return path, lint_paths([path], root=REPO, config=config)
+
+
+@pytest.mark.parametrize("stem", VIOLATION_CASES)
+def test_rule_fires_exactly_where_expected(stem):
+    path, result = _lint_case(stem)
+    expected = _markers(path)
+    assert expected, f"{path} has no expect[] markers"
+    got = {(f.line, f.rule_id) for f in result.findings}
+    assert got == expected, (
+        f"{stem}: expected findings {sorted(expected)}, got {sorted(got)}\n"
+        + "\n".join(f.render() for f in result.findings))
+
+
+@pytest.mark.parametrize("stem", VIOLATION_CASES)
+def test_pragma_twin_is_clean(stem):
+    path, result = _lint_case(f"{stem}_ok")
+    assert result.findings == [], (
+        f"{stem}_ok must lint clean:\n"
+        + "\n".join(f.render() for f in result.findings))
+    assert result.suppressed > 0, (
+        f"{stem}_ok seeds violations behind pragmas — suppressed count "
+        f"should be positive, not {result.suppressed}")
+
+
+def test_recompile_hazard_shape_branch_is_warning_only():
+    _, result = _lint_case("case_recompile_hazard")
+    warnings = [f for f in result.findings if f.severity is Severity.WARNING]
+    assert warnings and all("shape" in f.message for f in warnings)
+    errors = [f for f in result.findings if f.severity is Severity.ERROR]
+    assert errors  # the .item()/int()/jit-in-loop seeds are hard errors
+
+
+def test_repo_gate_is_clean():
+    """The acceptance gate: jitlint over src+tests exits 0 with the
+    committed config, and the only allowlisted finding is the documented
+    shardings.py parameter-count threshold."""
+    config = load_config(root=REPO)
+    result = lint_paths(["src", "tests"], root=REPO, config=config)
+    assert result.exit_code() == 0, "\n".join(
+        f.render() for f in result.findings)
+    assert [(f.rule_id, f.path) for f in result.allowed] == [
+        ("JL002", "src/repro/launch/shardings.py")]
+    assert result.files > 50  # the sweep actually traversed the repo
+
+
+def test_engine_compile_inventory_is_clean():
+    """serve/engine.py is the real target of JL006 — every jitted program
+    must be warmed; this locks the invariant against regressions."""
+    result = lint_paths([REPO / "src/repro/serve/engine.py"], root=REPO,
+                        rules=[get_rule("JL006")])
+    assert result.findings == [], "\n".join(
+        f.render() for f in result.findings)
+
+
+def test_unknown_pragma_label_is_reported(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text("x = 1  # jitlint: ignore[JL999]\n")
+    result = lint_paths([f], root=tmp_path)
+    assert [(g.rule_id, g.line) for g in result.findings] == [("JL000", 1)]
+    assert "JL999" in result.findings[0].message
+
+
+def test_skip_file_pragma(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "# jitlint: skip-file\n"
+        "def probe(compiled):\n"
+        "    return compiled.cost_analysis()\n")
+    result = lint_paths([f], root=tmp_path)
+    assert result.findings == []
+    assert result.files == 1
+
+
+def test_syntax_error_is_a_finding_not_a_crash(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text("def broken(:\n")
+    result = lint_paths([f], root=tmp_path)
+    assert [g.rule_id for g in result.findings] == ["JL000"]
+    assert "syntax error" in result.findings[0].message
+
+
+def test_allowlist_absorbs_finding(tmp_path):
+    (tmp_path / "tests").mkdir()            # JL004 only inspects tests/*
+    f = tmp_path / "tests" / "test_opt.py"
+    f.write_text("import hypothesis\n")
+    config = LintConfig(allow=[AllowEntry(
+        rule="JL004", path="tests/test_opt.py", reason="corpus fixture")])
+    result = lint_paths([f], root=tmp_path, config=config)
+    assert result.findings == []
+    assert [g.rule_id for g in result.allowed] == ["JL004"]
+    assert "corpus fixture" in result.allowed[0].allowed_by
+
+
+def test_allow_entry_requires_reason(tmp_path):
+    cfg = tmp_path / "jitlint.toml"
+    cfg.write_text('[[allow]]\nrule = "JL002"\npath = "x.py"\n')
+    with pytest.raises(ValueError, match="missing required key"):
+        load_config(cfg)
+    cfg.write_text(
+        '[[allow]]\nrule = "JL002"\npath = "x.py"\nreason = "  "\n')
+    with pytest.raises(ValueError, match="empty reason"):
+        load_config(cfg)
+
+
+def test_config_exclude(tmp_path):
+    (tmp_path / "skipme").mkdir()
+    f = tmp_path / "skipme" / "test_mod.py"
+    f.write_text("import hypothesis\n")
+    config = LintConfig(exclude=["skipme/*"])
+    result = lint_paths([tmp_path], root=tmp_path, config=config)
+    assert result.files == 0
+
+
+def _run_cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.jitlint", *argv],
+        capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def test_cli_exit_one_on_violations(tmp_path):
+    # the optional-dep case needs no option overrides, so the CLI can
+    # reproduce the finding end to end; an empty --config sidesteps the
+    # repo jitlint.toml (which excludes the corpus from the real gate)
+    empty_cfg = tmp_path / "jitlint.toml"
+    empty_cfg.write_text("")
+    json_out = tmp_path / "findings.json"
+    proc = _run_cli(str(CASES / "case_optional_dep.py"),
+                    "--root", str(REPO), "--config", str(empty_cfg),
+                    "--json", str(json_out))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "JL004" in proc.stdout
+    payload = json.loads(json_out.read_text())
+    assert payload["version"] == 1
+    assert payload["errors"] == 3
+    assert {f["rule_id"] for f in payload["findings"]} == {"JL004"}
+
+
+def test_cli_exit_zero_on_clean_file(tmp_path):
+    empty_cfg = tmp_path / "jitlint.toml"
+    empty_cfg.write_text("")
+    proc = _run_cli(str(CASES / "case_optional_dep_ok.py"),
+                    "--root", str(REPO), "--config", str(empty_cfg))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "1 file(s)" in proc.stdout  # it really linted the corpus file
+
+
+def test_cli_list_rules():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rule_id in ("JL001", "JL002", "JL003", "JL004", "JL005", "JL006"):
+        assert rule_id in proc.stdout

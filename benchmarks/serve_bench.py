@@ -13,6 +13,11 @@ Gates (all assertions, the acceptance criteria for the serving path):
     baseline while long prompts prefill;
   * chunked output is identical (token-for-token) to the unchunked reference
     across the attention, RG-LRU, and Mamba state families;
+  * placement policy: an engine resolved through the ExecutionOracle
+    (``--policy auto``, the default) generates tokens bitwise-identical to
+    the fixed-knob engine with zero recompiles after warmup, and the report
+    carries the plan's predicted per-phase latency next to the measured
+    times (the calibration loop's raw material);
   * paged KV + prefix cache (the shared-prefix workload): nonzero
     prefix-cache hit rate and fewer prefill tokens computed than the same
     trace with the cache off, zero recompiles after warmup with paging on,
@@ -92,6 +97,73 @@ def verify_chunked_identity(max_new: int = 6) -> dict:
             f"  chunked:   {rc.generated}\n  unchunked: {ru.generated}")
         out[arch] = {"tokens": rc.generated,
                      "chunks": chunked.stats.prefill_chunks}
+    return out
+
+
+def policy_identity_gate(max_new: int = 6) -> dict:
+    """Oracle-resolved engines must be a pure re-derivation of the fixed
+    configuration: same tokens, same closed program inventory.
+
+    For each state family, builds the same reduced model twice — once with
+    ``policy="fixed"`` (constructor-global knobs) and once with
+    ``policy="auto"`` (ExecutionOracle characterize -> cluster -> cost) —
+    and asserts (a) bitwise-identical generated tokens, (b) zero recompiles
+    after warmup on the auto engine, (c) the auto engine's stats carry the
+    placement section with the plan's per-cluster policies and predictions.
+    """
+    import jax
+    from repro.configs import reduced_config
+    from repro.launch.serve import build_engine
+    from repro.models import build_model
+    from repro.serve.engine import Request
+
+    out = {}
+    for arch in VERIFY_ARCHS:
+        cfg = reduced_config(arch)
+        cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+        def trace():
+            rng = np.random.RandomState(11)
+            return [Request(rid=i,
+                            prompt=rng.randint(1, cfg.vocab_size,
+                                               5 + 7 * i).tolist(),
+                            max_new_tokens=max_new) for i in range(4)]
+
+        def run(policy):
+            eng = build_engine(cfg, params, slots=2, max_len=64,
+                               max_bucket=32, policy=policy)
+            eng.warmup()
+            w = eng.stats.summary()
+            eng.reset_stats()
+            done = eng.run(trace())
+            s = eng.stats.summary()
+            rec = (s["prefill_compiles"] - w["prefill_compiles"]) \
+                + (s["decode_compiles"] - w["decode_compiles"])
+            return [r.generated for r in done], s, rec
+
+        fixed_toks, fixed_s, _ = run("fixed")
+        auto_toks, auto_s, auto_rec = run("auto")
+        assert auto_toks == fixed_toks, (
+            f"{arch}: --policy auto changed generated tokens:\n"
+            f"  auto:  {auto_toks}\n  fixed: {fixed_toks}")
+        assert auto_rec == 0, (
+            f"{arch}: {auto_rec} recompiles after warmup with the "
+            f"placement policy active")
+        placement = auto_s.get("placement")
+        assert placement and placement["source"] == "auto", placement
+        assert placement["policies"], (
+            f"{arch}: auto plan resolved no per-cluster policies")
+        assert fixed_s["placement"]["source"] == "fixed", fixed_s.get(
+            "placement")
+        out[arch] = {
+            "tokens_identical": auto_toks == fixed_toks,
+            "recompiles_after_warmup": auto_rec,
+            "clusters": placement["layer_clusters"],
+            "decode_overrides": placement["decode_overrides"],
+            "predicted": placement["predicted"],
+            "measured": placement["measured"],
+        }
     return out
 
 
@@ -341,8 +413,13 @@ def main() -> None:
     ap.add_argument("--max-bucket", type=int, default=64)
     ap.add_argument("--max-prefill-per-step", type=int, default=4)
     ap.add_argument("--max-prefill-batch", type=int, default=4)
+    ap.add_argument("--policy", default="auto", choices=("auto", "fixed"),
+                    help="resolve engine knobs through the placement oracle "
+                         "('auto', default) or keep constructor-global "
+                         "knobs ('fixed')")
     ap.add_argument("--skip-verify", action="store_true",
-                    help="skip the 3-family chunked-identity check")
+                    help="skip the 3-family chunked-identity and "
+                         "policy-identity checks")
     ap.add_argument("--skip-paged", action="store_true",
                     help="skip the paged-KV shared-prefix workload")
     ap.add_argument("--sharded", action="store_true",
@@ -380,7 +457,8 @@ def main() -> None:
                           max_bucket=args.max_bucket,
                           max_prefill_per_step=args.max_prefill_per_step,
                           max_prefill_batch=args.max_prefill_batch,
-                          plan_cfg=get_config(args.arch))
+                          plan_cfg=get_config(args.arch),
+                          policy=args.policy)
     # short lengths spanning >= 3 buckets, plus prompts long enough to need
     # ~4 chunk-continuation calls each
     assert len(engine.buckets) >= 3, (
@@ -420,6 +498,8 @@ def main() -> None:
     report = {
         "arch": args.arch,
         "slots": args.slots,
+        "policy": args.policy,
+        "placement": s.get("placement", {}),
         "buckets": list(engine.buckets),
         "prefill_chunk": engine.prefill_chunk,
         "batch_buckets": list(engine.batch_buckets),
@@ -434,6 +514,7 @@ def main() -> None:
     }
     if not args.skip_verify:
         report["chunked_identity"] = verify_chunked_identity()
+        report["policy_identity"] = policy_identity_gate()
     if not args.skip_paged:
         report["paged_prefix"] = paged_shared_prefix_gate()
     compare = None

@@ -5,5 +5,6 @@ from . import (  # noqa: F401
     config_literal,
     optional_dep,
     pallas_spec,
+    policy_knob,
     recompile_hazard,
 )

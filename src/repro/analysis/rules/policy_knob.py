@@ -1,0 +1,68 @@
+"""JL007 policy-owned-knob: serving code must not read execution knobs.
+
+The placement refactor moved ownership of the runtime-safe execution knobs
+(kernel variants, scan chunking, attention blocking, remat) out of the
+serving layer: ``serve/placement.ExecutionOracle`` resolves them per layer
+cluster into an ``ExecutionPolicy``, and they reach the engine only as
+``cfg_overrides`` merged by ``core/executor.phase_profiles``.  An engine
+that reads ``cfg.attn_impl`` (or branches on ``cfg.scan_chunk``) re-opens
+the split-brain the refactor closed — two places deciding how a phase
+lowers, which is exactly how a "zero recompiles after warmup" invariant
+rots: the oracle picks one variant, the engine quietly another, and the
+divergence only shows up as a mid-serve recompile.
+
+The rule flags any attribute access whose name is a policy-owned knob
+inside ``src/repro/serve/`` — reads and writes alike (a write is the same
+ownership violation with worse aim).  ``serve/placement.py`` is the owner
+and is allowed by default (``allow_paths``); model/core code is out of
+scope (models *consume* the knobs; the executor *merges* them — both by
+design).
+"""
+from __future__ import annotations
+
+import ast
+from fnmatch import fnmatch
+
+from ..findings import Severity
+from ..registry import Rule, register
+
+# the runtime-safe execution knobs (core/executor.RUNTIME_SAFE_KEYS) — the
+# set the oracle owns.  Mirrored literally rather than imported: jitlint is
+# stdlib-only and must run in the no-jax lint job.
+_KNOBS = frozenset({
+    "remat", "moe_impl", "unroll_scans", "scan_chunk", "attn_block_kv",
+    "attn_f32", "attn_impl", "rglru_impl", "ssm_impl",
+})
+
+_DEFAULT_ALLOW = ("src/repro/serve/placement.py",)
+
+
+@register
+class PolicyOwnedKnob(Rule):
+    id = "JL007"
+    name = "policy-owned-knob"
+    severity = Severity.ERROR
+    paths = ("src/repro/serve/*",)
+
+    def check(self, mod, options):
+        allow = tuple(options.get("allow_paths", _DEFAULT_ALLOW))
+        if any(fnmatch(mod.relpath, p) for p in allow):
+            return
+        knobs = frozenset(options.get("knobs", _KNOBS))
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and node.attr in knobs:
+                yield self.finding(
+                    mod, node,
+                    f"serving code accesses policy-owned knob "
+                    f"'{node.attr}': execution knobs are resolved per "
+                    f"cluster by serve/placement.ExecutionOracle and reach "
+                    f"the engine only as phase-profile cfg_overrides "
+                    f"(core/executor.phase_profiles)")
+            elif isinstance(node, ast.keyword) and node.arg in knobs:
+                # cfg.replace(attn_impl=...) — the engine picking a kernel
+                # variant by hand is the same ownership violation
+                yield self.finding(
+                    mod, node.value,
+                    f"serving code sets policy-owned knob '{node.arg}' "
+                    f"directly: kernel-variant / chunking decisions belong "
+                    f"to the placement oracle's ExecutionPolicy")

@@ -109,19 +109,30 @@ def kmeans_cluster(chars: list[LayerCharacteristics], k: int = 5, seed: int = 0,
                    iters: int = 100) -> tuple[np.ndarray, np.ndarray]:
     """From-scratch k-means on log features. Returns (labels, centroids)."""
     x = np.stack([_features(c) for c in chars])
+    # explicit seeded generator: every draw below goes through rng, so the
+    # same (chars, k, seed) always yields the same labels — the oracle's
+    # reproducibility contract (and CI's)
     rng = np.random.RandomState(seed)
-    # k-means++ init
+    # k-means++ init; degenerate inputs (all points coincident — common for a
+    # transformer whose layers are identical specs) make every d2 zero, where
+    # the weighted draw is undefined: fall back to a uniform seeded draw
+    # instead of crashing np.random.choice with probs that don't sum to 1
     cent = [x[rng.randint(len(x))]]
     for _ in range(k - 1):
         d2 = np.min(np.stack([np.sum((x - c) ** 2, axis=1) for c in cent]), axis=0)
-        probs = d2 / max(d2.sum(), 1e-12)
+        total = float(d2.sum())
+        if total <= 0.0:
+            cent.append(x[rng.randint(len(x))])
+            continue
+        probs = d2 / total
+        probs = probs / probs.sum()     # renormalize away fp round-off
         cent.append(x[rng.choice(len(x), p=probs)])
     cent_arr = np.stack(cent)
     labels = np.zeros(len(x), dtype=int)
-    for _ in range(iters):
+    for it in range(iters):
         d = np.sum((x[:, None, :] - cent_arr[None, :, :]) ** 2, axis=2)
         new_labels = np.argmin(d, axis=1)
-        if np.array_equal(new_labels, labels) and _ > 0:
+        if np.array_equal(new_labels, labels) and it > 0:
             break
         labels = new_labels
         for j in range(k):

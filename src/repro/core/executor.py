@@ -31,7 +31,7 @@ from .strategy import MensaPlan, MeshShape, plan
 # so per-phase profiles may apply only these
 RUNTIME_SAFE_KEYS = frozenset({
     "remat", "moe_impl", "unroll_scans", "scan_chunk", "attn_block_kv",
-    "attn_f32",
+    "attn_f32", "attn_impl", "rglru_impl", "ssm_impl",
 })
 
 
@@ -87,13 +87,29 @@ def execution_profile(cfg: ArchConfig, shape: ShapeSpec,
 def phase_profiles(cfg: ArchConfig,
                    prefill_shape: ShapeSpec | None = None,
                    decode_shape: ShapeSpec | None = None,
-                   mesh: MeshShape = MeshShape()
+                   mesh: MeshShape = MeshShape(),
+                   policy=None,
                    ) -> tuple[ExecutionProfile, ExecutionProfile]:
     """Per-phase serving profiles: prefill lowers compute-centric (Pascal
     cluster), decode memory-centric (Jacquard/Pavlov clusters).  The serving
-    engine builds one jitted program per phase from these."""
+    engine builds one jitted program per phase from these.
+
+    ``policy`` (a ``serve.placement.PlacementPlan``, duck-typed so core stays
+    import-independent of serve) merges the oracle's per-phase kernel-variant
+    overrides into each profile; every merged key must be runtime-safe."""
     from ..configs.shapes import SHAPES
-    return (execution_profile(cfg, prefill_shape or SHAPES["prefill_32k"],
-                              mesh),
-            execution_profile(cfg, decode_shape or SHAPES["decode_32k"],
-                              mesh))
+    pre = execution_profile(cfg, prefill_shape or SHAPES["prefill_32k"], mesh)
+    dec = execution_profile(cfg, decode_shape or SHAPES["decode_32k"], mesh)
+    if policy is not None:
+        for extra in (policy.prefill_cfg_overrides, policy.decode_cfg_overrides):
+            bad = set(extra) - RUNTIME_SAFE_KEYS
+            if bad:
+                raise ValueError(f"policy overrides {sorted(bad)} are not "
+                                 "runtime-safe")
+        pre = ExecutionProfile(
+            pre.arch, pre.shape, pre.strategy,
+            {**pre.cfg_overrides, **policy.prefill_cfg_overrides}, pre.plan)
+        dec = ExecutionProfile(
+            dec.arch, dec.shape, dec.strategy,
+            {**dec.cfg_overrides, **policy.decode_cfg_overrides}, dec.plan)
+    return pre, dec

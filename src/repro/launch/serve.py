@@ -15,6 +15,7 @@ from ..configs import get_config, reduced_config
 from ..core.executor import phase_profiles
 from ..models import build_model
 from ..serve.engine import Request, ServeEngine, prefill_buckets
+from ..serve.placement import ExecutionOracle, PlacementPlan
 
 
 def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
@@ -25,7 +26,8 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
                  kv_blocks: int | None = None,
                  prefix_cache: bool = True,
                  mesh=None, param_strategy: str = "tp",
-                 plan_cfg=None, profiles=None) -> ServeEngine:
+                 plan_cfg=None, profiles=None,
+                 policy="auto") -> ServeEngine:
     """Engine with the prefill/decode programs routed through their
     Mensa execution profiles (runtime-safe overrides only — the phase models
     share one parameter tree).  With today's cost model the serve-shape
@@ -38,8 +40,30 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
     ``mesh`` shards weights, slot state, and the block pool over a
     (data, model) device mesh (``launch.mesh.make_serve_mesh``);
     ``param_strategy`` picks the weight layout ("tp" Mensa clusters /
-    "dp" replicated)."""
-    prefill_prof, decode_prof = profiles or phase_profiles(plan_cfg or cfg)
+    "dp" replicated).
+
+    ``policy``: "auto" (default) resolves a ``PlacementPlan`` through the
+    ExecutionOracle (characterize -> cluster -> cost) and applies its
+    per-phase kernel-variant overrides on top of the Mensa profiles;
+    "fixed" keeps the constructor-global knobs; a pre-resolved
+    ``PlacementPlan`` is used as-is.  Policies only pick among
+    token-identical implementations and are resolved before anything
+    compiles — on a backend without native Pallas lowering the auto plan
+    is exactly the fixed engine."""
+    plan = None
+    if isinstance(policy, PlacementPlan):
+        plan = policy
+    elif policy == "auto":
+        plan = ExecutionOracle(
+            plan_cfg or cfg, slots=slots, max_len=max_len,
+            min_bucket=min_bucket, max_bucket=max_bucket,
+            mesh_axes=tuple(mesh.axis_names) if mesh is not None else (),
+        ).resolve()
+    elif policy != "fixed":
+        raise ValueError(f"policy must be 'auto', 'fixed', or a "
+                         f"PlacementPlan, got {policy!r}")
+    prefill_prof, decode_prof = profiles or phase_profiles(plan_cfg or cfg,
+                                                           policy=plan)
     model = build_model(cfg)
     if params is None:
         params = model.init(jax.random.PRNGKey(0))
@@ -58,7 +82,8 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
         prefix_cache=prefix_cache,
         mesh=mesh, param_strategy=param_strategy,
         prefill_model=build_model(prefill_cfg) if prefill_cfg != cfg else None,
-        decode_model=build_model(decode_cfg) if decode_cfg != cfg else None)
+        decode_model=build_model(decode_cfg) if decode_cfg != cfg else None,
+        policy=plan)
 
 
 def parse_args(argv=None) -> argparse.Namespace:
@@ -117,6 +142,14 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--param-strategy", default="tp", choices=("tp", "dp"),
                     help="weight sharding template on a mesh: Mensa cluster "
                          "TP or replicated-dp")
+    ap.add_argument("--policy", default="auto", choices=("auto", "fixed"),
+                    help="'auto': the placement oracle characterizes and "
+                         "clusters the served layers and picks kernel "
+                         "variant / chunk / buckets per cluster; 'fixed': "
+                         "constructor-global knobs only")
+    ap.add_argument("--policy-dump", action="store_true",
+                    help="print the resolved PlacementPlan as JSON and exit "
+                         "without building the engine")
     return ap.parse_args(argv)
 
 
@@ -132,7 +165,23 @@ def main(argv=None) -> None:
     args = parse_args(argv)
 
     plan_cfg = get_config(args.arch)
-    prefill_prof, decode_prof = phase_profiles(plan_cfg)
+    mesh = mesh_from_args(args)
+    plan = None
+    if args.policy == "auto" or args.policy_dump:
+        plan = ExecutionOracle(
+            plan_cfg, slots=args.slots, max_len=args.max_len,
+            min_bucket=args.min_bucket, max_bucket=args.max_bucket,
+            mesh_axes=tuple(mesh.axis_names) if mesh is not None else (),
+        ).resolve()
+    if args.policy_dump:
+        print(plan.dumps())
+        return
+    if plan is not None:
+        print(f"[serve] placement plan ({plan.source}, backend "
+              f"{plan.backend}): clusters {list(plan.layer_clusters)} "
+              f"chunk={plan.prefill_chunk} "
+              f"overrides={plan.decode_cfg_overrides}")
+    prefill_prof, decode_prof = phase_profiles(plan_cfg, policy=plan)
     print(f"[serve] Mensa prefill plan for {args.arch}:")
     print(prefill_prof.plan.summary())
     print(f"[serve] prefill strategy={prefill_prof.strategy} "
@@ -141,7 +190,6 @@ def main(argv=None) -> None:
           f"overrides={decode_prof.cfg_overrides}")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    mesh = mesh_from_args(args)
     if mesh is not None:
         print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices "
               f"(param strategy {args.param_strategy})")
@@ -155,7 +203,8 @@ def main(argv=None) -> None:
                           kv_blocks=args.kv_blocks,
                           prefix_cache=args.prefix_cache,
                           mesh=mesh, param_strategy=args.param_strategy,
-                          profiles=(prefill_prof, decode_prof))
+                          profiles=(prefill_prof, decode_prof),
+                          policy=plan if plan is not None else "fixed")
     if args.warmup:
         engine.warmup()
     rng = np.random.RandomState(0)

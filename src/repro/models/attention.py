@@ -78,13 +78,24 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_kv: int = 512,
                     q_offset: int | jax.Array = 0,
                     unroll: bool = False,
-                    f32_probs: bool = True) -> jax.Array:
+                    f32_probs: bool = True,
+                    impl: str = "xla") -> jax.Array:
     """Online-softmax attention.
 
     q: (B, Sq, H, hd); k, v: (B, Skv, KVH, hd) with H % KVH == 0.
     Returns (B, Sq, H, hd).  ``q_offset`` is the absolute position of q[0]
     relative to k[0] (for cached prefill continuation).
+
+    ``impl="pallas"`` routes the aligned case (q starts at position 0, the
+    shape every bucketed-prefill program compiles) to the fused Pallas flash
+    kernel; chunk continuations carry a traced ``q_offset`` and fall back to
+    the XLA scan, which lowers to the same math.
     """
+    if impl == "pallas" and isinstance(q_offset, int) and q_offset == 0:
+        # function-level import: kernels/paged_attention's package init pulls
+        # this module back in for its jnp reference oracle
+        from ..kernels.flash_attention.ops import flash_attention as _pallas
+        return _pallas(q, k, v, causal=causal, window=window)
     b, sq, h, hd = q.shape
     _, skv, kvh, _ = k.shape
     assert h % kvh == 0
@@ -300,7 +311,8 @@ def _scatter_paged(pool: jax.Array, blk: jax.Array, off: jax.Array,
 def paged_decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
                            cache: PagedKVCache, block_table: jax.Array, *,
                            write_mask: jax.Array | None = None,
-                           gather_spec=None
+                           gather_spec=None,
+                           impl: str = "xla"
                            ) -> tuple[jax.Array, PagedKVCache]:
     """One-token attention against the paged pool — the paged twin of
     :func:`decode_attention`, bitwise-identical to it on any trace whose
@@ -323,6 +335,20 @@ def paged_decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
     k_pool = _scatter_paged(cache.k, blk, idx % bs, new_k[:, 0])
     v_pool = _scatter_paged(cache.v, blk, idx % bs, new_v[:, 0])
     new_cache = cache._replace(k=k_pool, v=v_pool)
+    inc = 1 if write_mask is None else write_mask.astype(jnp.int32)
+    if impl == "pallas" and gather_spec is None:
+        # scalar-prefetch gather kernel — no materialized (B,Smax) gather.
+        # gather_spec (cross-shard block layouts) stays on the jnp path: the
+        # kernel's block-table prefetch assumes the pool's native layout.
+        from ..kernels.common import use_interpret
+        from ..kernels.paged_attention.kernel import paged_decode_attention_raw
+        table = jnp.minimum(block_table,
+                            cache.k.shape[0] - 1).astype(jnp.int32)
+        out = paged_decode_attention_raw(
+            q[:, 0], k_pool, v_pool, table, cache.length.astype(jnp.int32),
+            interpret=use_interpret())
+        return (out[:, None].astype(q.dtype),
+                new_cache._replace(length=cache.length + inc))
     ks, vs = gather_paged_kv(new_cache, block_table,
                              gather_spec)                        # (B,Smax,..)
     smax = ks.shape[1]
@@ -335,7 +361,6 @@ def paged_decode_attention(q: jax.Array, new_k: jax.Array, new_v: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bnGk,bknd->bnGd", p, vs.astype(jnp.float32))
     out = out.reshape(b, 1, h, hd).astype(q.dtype)
-    inc = 1 if write_mask is None else write_mask.astype(jnp.int32)
     return out, new_cache._replace(length=cache.length + inc)
 
 

@@ -53,6 +53,12 @@ class ArchConfig:
     unroll_scans: bool = False        # roofline mode: no while loops, so
                                       # compiled.cost_analysis() counts every
                                       # iteration (XLA counts loop bodies once)
+    # kernel-variant switches ("xla" reference path | "pallas" fused kernel).
+    # Owned by serve/placement.ExecutionPolicy at serving time — the oracle
+    # resolves them per cluster before warmup; they never change shapes.
+    attn_impl: str = "xla"            # flash prefill / paged decode kernels
+    rglru_impl: str = "xla"           # pavlov_rglru linear-scan kernel
+    ssm_impl: str = "xla"             # pavlov_ssm selective-scan kernel
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
 

@@ -119,12 +119,23 @@ def init_rglru_block(key, d_model: int, d_rnn: int, *, conv_width: int = 4,
     }
 
 
+def _divisor_block(n: int, target: int) -> int:
+    """Largest block size <= target that divides n (Pallas kernels assert
+    exact tiling; n is a static shape so this runs at trace time)."""
+    b = max(1, min(n, target))
+    while n % b:
+        b -= 1
+    return b
+
+
 def rglru_core(params: dict, x: jax.Array, h0: jax.Array | None = None,
                chunk: int = 512, unroll: bool = False,
-               seq_mask: jax.Array | None = None):
+               seq_mask: jax.Array | None = None, impl: str = "xla"):
     """The RG-LRU recurrence.  x: (B,S,d_rnn) (post-conv).  Returns (y, h_T).
     ``seq_mask``: (B,S) bool; False positions pass the state through
-    unchanged (a=1, b=0), so h_T is the state at the last True position."""
+    unchanged (a=1, b=0), so h_T is the state at the last True position.
+    ``impl="pallas"`` runs the scan through the fused pavlov_rglru kernel
+    (h0 folded into b[:, 0]; identical math, same masking semantics)."""
     dt = x.dtype
     c = 8.0
     xf = x.astype(jnp.float32)
@@ -156,6 +167,17 @@ def rglru_core(params: dict, x: jax.Array, h0: jax.Array | None = None,
         b = jnp.where(m, b, 0.0)
     if h0 is None:
         h0 = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+    if impl == "pallas":
+        from ..kernels.pavlov_rglru.ops import pavlov_rglru
+        # the kernel scans from h=0; folding a_0*h0 into b_0 reproduces the
+        # h0-seeded recurrence exactly (h_1 = a_0*h0 + b_0 either way)
+        b = b.at[:, 0].add(a[:, 0] * h0)
+        h = pavlov_rglru(a, b,
+                         block_t=_divisor_block(a.shape[1], 128),
+                         block_e=_divisor_block(a.shape[2], 512))
+        # masked tail positions are identity steps (a=1, b=0), so the final
+        # row already holds the state at the last valid position
+        return h.astype(dt), h[:, -1].astype(jnp.float32)
     h, h_last = _chunked_linear_scan(a, b, h0, chunk, unroll)
     return h.astype(dt), h_last
 
@@ -163,7 +185,7 @@ def rglru_core(params: dict, x: jax.Array, h0: jax.Array | None = None,
 def rglru_block(params: dict, x: jax.Array, *, chunk: int = 512,
                 unroll: bool = False,
                 state: dict | None = None, return_state: bool = False,
-                length: jax.Array | None = None):
+                length: jax.Array | None = None, impl: str = "xla"):
     """Full Griffin recurrent block.  x: (B,S,D) -> (B,S,D).
     ``length``: (B,) valid prefix lengths when x is right-padded (bucketed
     prefill) — the returned state then reflects position length-1."""
@@ -177,7 +199,8 @@ def rglru_block(params: dict, x: jax.Array, *, chunk: int = 512,
         jnp.arange(x.shape[1])[None, :] < length[:, None]
     u, new_conv = causal_conv1d(u, params["conv_w"].astype(dt), conv_state,
                                 length=length)
-    h, h_last = rglru_core(params, u, h0, chunk, unroll, seq_mask=seq_mask)
+    h, h_last = rglru_core(params, u, h0, chunk, unroll, seq_mask=seq_mask,
+                           impl=impl)
     out = jnp.einsum("bse,ed->bsd", (h * y), params["w_out"].astype(dt))
     if return_state:
         return out, {"conv": new_conv, "h": h_last}
@@ -209,9 +232,13 @@ def init_mamba_block(key, d_model: int, d_inner: int, d_state: int = 16,
 
 def mamba_ssm(params: dict, x: jax.Array, dt_rank: int, d_state: int,
               h0: jax.Array | None = None, chunk: int = 256,
-              unroll: bool = False, seq_mask: jax.Array | None = None):
+              unroll: bool = False, seq_mask: jax.Array | None = None,
+              impl: str = "xla"):
     """Selective scan.  x: (B,S,d_inner) (post conv+silu).  Returns (y, h_T).
-    ``seq_mask``: (B,S) bool; False positions leave the state unchanged."""
+    ``seq_mask``: (B,S) bool; False positions leave the state unchanged.
+    ``impl="pallas"`` runs the fused pavlov_ssm kernel; it scans from h=0 and
+    yields outputs only, so it requires ``h0 is None`` and returns h_T=None —
+    callers that carry state across calls (serving) must stay on "xla"."""
     B_, S, di = x.shape
     xf = x.astype(jnp.float32)
     proj = jnp.einsum("bsd,dr->bsr", xf, params["x_proj"].astype(jnp.float32))
@@ -220,6 +247,16 @@ def mamba_ssm(params: dict, x: jax.Array, dt_rank: int, d_state: int,
         jnp.einsum("bsr,rd->bsd", dt_in, params["dt_proj"].astype(jnp.float32))
         + params["dt_bias"].astype(jnp.float32))                    # (B,S,di)
     a = -jnp.exp(params["a_log"].astype(jnp.float32))               # (di,Ns)
+    if impl == "pallas" and h0 is None:
+        from ..kernels.pavlov_ssm.ops import pavlov_ssm
+        # tail padding only contributes to padded output rows (the state at
+        # valid positions never sees a later timestep), so the unmasked
+        # kernel matches the masked scan on every valid position
+        y = pavlov_ssm(delta, xf, b_in, c_in, a,
+                       params["d_skip"].astype(jnp.float32),
+                       block_t=_divisor_block(S, 128),
+                       block_d=_divisor_block(di, 512))
+        return y.astype(x.dtype), None
     # first-order recurrence per (channel, state): h = exp(delta*a) h + delta*B*x
     alpha = jnp.exp(delta[..., None] * a[None, None])               # (B,S,di,Ns)
     beta = (delta * xf)[..., None] * b_in[:, :, None, :]            # (B,S,di,Ns)
@@ -239,7 +276,7 @@ def mamba_block(params: dict, x: jax.Array, *, d_state: int = 16,
                 dt_rank: int | None = None, chunk: int = 256,
                 unroll: bool = False,
                 state: dict | None = None, return_state: bool = False,
-                length: jax.Array | None = None):
+                length: jax.Array | None = None, impl: str = "xla"):
     """Full Mamba-1 block.  x: (B,S,D) -> (B,S,D).
     ``length``: (B,) valid prefix lengths when x is right-padded."""
     dt = x.dtype
@@ -254,8 +291,11 @@ def mamba_block(params: dict, x: jax.Array, *, d_state: int = 16,
     xi, new_conv = causal_conv1d(xi, params["conv_w"].astype(dt), conv_state,
                                  length=length)
     xi = jax.nn.silu(xi)
+    # the fused kernel yields no carry state — callers that thread state
+    # (serving prefill/decode) must take the XLA scan
+    ssm_impl = impl if (state is None and not return_state) else "xla"
     y, h_last = mamba_ssm(params, xi, dt_rank, d_state, h0, chunk, unroll,
-                          seq_mask=seq_mask)
+                          seq_mask=seq_mask, impl=ssm_impl)
     out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z),
                      params["out_proj"].astype(dt))
     if return_state:

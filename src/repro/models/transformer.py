@@ -145,7 +145,7 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
             if paged:
                 out, kv = attn_lib.paged_decode_attention(
                     q, k, v, state.kv, block_table, write_mask=wm,
-                    gather_spec=gather_spec)
+                    gather_spec=gather_spec, impl=cfg.attn_impl)
             else:
                 out, kv = attn_lib.decode_attention(
                     q, k, v, state.kv,
@@ -172,17 +172,20 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
                 out = attn_lib.flash_attention(q, k, v, causal=True,
                                                window=cfg.window,
                                                block_kv=cfg.attn_block_kv,
-                                               unroll=cfg.unroll_scans)
+                                               unroll=cfg.unroll_scans,
+                                               impl=cfg.attn_impl)
         elif kind == "enc":
             out = attn_lib.flash_attention(q, k, v, causal=False,
                                            block_kv=cfg.attn_block_kv,
                                            unroll=cfg.unroll_scans,
-                                           f32_probs=cfg.attn_f32)
+                                           f32_probs=cfg.attn_f32,
+                                           impl=cfg.attn_impl)
         else:
             out = attn_lib.flash_attention(q, k, v, causal=True,
                                            block_kv=cfg.attn_block_kv,
                                            unroll=cfg.unroll_scans,
-                                           f32_probs=cfg.attn_f32)
+                                           f32_probs=cfg.attn_f32,
+                                           impl=cfg.attn_impl)
         if mode == "prefill" and offset is None \
                 and kind in ("attn", "local", "dec"):
             if paged:
@@ -218,12 +221,13 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
         h = _norm(cfg, p["ln1"], x)
         if mode == "train":
             x = x + rec_lib.rglru_block(p["rec"], h, chunk=cfg.scan_chunk,
-                                        unroll=cfg.unroll_scans)
+                                        unroll=cfg.unroll_scans,
+                                        impl=cfg.rglru_impl)
         else:
             y, rec_state = rec_lib.rglru_block(
                 p["rec"], h, chunk=min(cfg.scan_chunk, h.shape[1]),
                 state=_resume_rec(state.rec, offset), return_state=True,
-                length=length)
+                length=length, impl=cfg.rglru_impl)
             x = x + y
             new_state = state._replace(rec=rec_state)
         x, lb = _attn_ffn_tail(cfg, p, x)
@@ -233,7 +237,8 @@ def apply_block(cfg: ArchConfig, kind: str, p: dict, x: jax.Array,
             x = x + rec_lib.mamba_block(p["ssm"], h, d_state=cfg.d_state,
                                         dt_rank=cfg.dt_rank or None,
                                         chunk=cfg.scan_chunk,
-                                        unroll=cfg.unroll_scans)
+                                        unroll=cfg.unroll_scans,
+                                        impl=cfg.ssm_impl)
         else:
             y, rec_state = rec_lib.mamba_block(
                 p["ssm"], h, d_state=cfg.d_state,

@@ -154,6 +154,8 @@ class EngineStats:
     kv_shards: int = 1
     kv_in_use_per_shard: list = field(default_factory=list)
     kv_peak_per_shard: list = field(default_factory=list)   # sums to peak
+    # ---- placement (serve/placement.py plan summary; set by the engine) ----
+    placement: dict = field(default_factory=dict)
 
     def record_ttft(self, v: float) -> None:
         self.ttft_count += 1
@@ -219,6 +221,19 @@ class EngineStats:
                 out["kv"]["shards"] = self.kv_shards
                 out["kv"]["in_use_per_shard"] = list(self.kv_in_use_per_shard)
                 out["kv"]["peak_per_shard"] = list(self.kv_peak_per_shard)
+        if self.placement:
+            # plan (predicted) + measured, side by side — the pair
+            # benchmarks/calibrate.py fits the cost model against
+            p = dict(self.placement)
+            p["measured"] = {
+                "prefill_call_s": self.prefill_time_s
+                / max(self.prefill_calls + self.prefill_chunks, 1),
+                "prefill_token_s": self.prefill_time_s
+                / max(self.prefill_tokens_computed, 1),
+                "decode_step_s": self.decode_time_s
+                / max(self.decode_steps, 1),
+            }
+            out["placement"] = p
         return out
 
 
@@ -256,7 +271,8 @@ class ServeEngine:
                  mesh=None,
                  param_strategy: str = "tp",
                  prefill_model: Model | None = None,
-                 decode_model: Model | None = None):
+                 decode_model: Model | None = None,
+                 policy=None):
         """``greedy`` is a legacy knob: sampling is now per-request
         (Request.temperature/top_k/top_p/seed) and greedy stays the exact
         default, so both values are accepted and equivalent.
@@ -277,7 +293,16 @@ class ServeEngine:
         the data axes; heads/recurrence width over ``model`` when they
         divide it).  Axes that don't divide evenly fall back to replicated,
         so any mesh serves any shape.  Program outputs are pinned to the
-        canonical state sharding, keeping the compiled inventory closed."""
+        canonical state sharding, keeping the compiled inventory closed.
+
+        ``policy``: optional ``serve.placement.PlacementPlan`` from the
+        ExecutionOracle.  A plan supplies the bucket ladder and prefill
+        chunk (explicit constructor arguments still win) and is recorded in
+        ``EngineStats.placement``; its per-phase kernel-variant overrides
+        are applied by the caller when building ``prefill_model`` /
+        ``decode_model`` (see ``launch.serve.build_engine``).  Plans are
+        resolved before any program compiles and never consulted per tick,
+        so the zero-recompile invariant is untouched."""
         del greedy                      # superseded by per-request sampling
         self.model = model
         self.mesh = mesh
@@ -291,6 +316,8 @@ class ServeEngine:
         else:
             self._nd = 1
             self._data_axes = ()
+        if not buckets and policy is not None and policy.buckets:
+            buckets = policy.buckets
         self.buckets = tuple(sorted(buckets)) if buckets \
             else prefill_buckets(max_len, min_bucket)
         if self.buckets[-1] > max_len:
@@ -301,11 +328,21 @@ class ServeEngine:
         self.max_prefill_batch = max(1, min(max_prefill_batch, slots))
         self.batch_buckets = prefill_buckets(self.max_prefill_batch,
                                              min_bucket=1)
+        if not prefill_chunk and policy is not None and policy.prefill_chunk:
+            prefill_chunk = policy.prefill_chunk
         self.prefill_chunk = int(prefill_chunk) if prefill_chunk \
             else self.buckets[-1]
         if not 1 <= self.prefill_chunk <= max_len:
             raise ValueError(f"prefill_chunk {self.prefill_chunk} outside "
                              f"[1, max_len {max_len}]")
+        # every engine carries a plan: either the oracle's resolution or a
+        # "fixed" record of the constructor knobs (EngineStats.placement)
+        if policy is None:
+            from .placement import fixed_plan
+            policy = fixed_plan(model.cfg, buckets=self.buckets,
+                                prefill_chunk=self.prefill_chunk,
+                                backend=jax.default_backend())
+        self.policy = policy
         # per-phase programs (Mensa: compute-centric prefill vs memory-centric
         # decode lower as separate jitted functions)
         self.prefill_model = prefill_model or model
@@ -425,6 +462,7 @@ class ServeEngine:
             self.stats.kv_pool_blocks = self.kv.pool.num_blocks
             self.stats.kv_block_size = self.kv.block_size
             self.stats.kv_shards = self.kv.shards
+        self.stats.placement = self.policy.summary()
 
     def reset_stats(self) -> None:
         self.stats = EngineStats()

@@ -1,0 +1,28 @@
+"""Seeded JL007 violations: serving code touching policy-owned knobs.
+
+Never executed — parsed by tests/test_analysis.py only (with the rule's
+`paths` widened to see this directory).  In the real tree the rule fires
+only under ``src/repro/serve/`` and exempts ``serve/placement.py`` (the
+knob owner) via its default ``allow_paths``.
+"""
+
+
+def pick_kernel(cfg):
+    if cfg.attn_impl == "pallas":                 # expect[JL007]
+        return "flash"
+    return cfg.rglru_impl                         # expect[JL007]
+
+
+def chunk_width(cfg, bucket: int) -> int:
+    return min(bucket, cfg.scan_chunk)            # expect[JL007]
+
+
+def hand_tuned(cfg):
+    return cfg.replace(remat=False)               # expect[JL007]
+
+
+# --- non-knob attributes and bare names: no findings ---
+def fine(cfg, policy):
+    width = policy.prefill_chunk                  # plan geometry, not a knob
+    attn_impl = "xla"                             # bare name, not an access
+    return width, attn_impl, cfg.vocab_size

@@ -1,0 +1,15 @@
+"""Pragma-suppressed twin of case_policy_knob.py — must lint clean."""
+
+
+def pick_kernel(cfg):
+    if cfg.attn_impl == "pallas":                 # jitlint: ignore[JL007]
+        return "flash"
+    return cfg.rglru_impl                         # jitlint: ignore[policy-owned-knob]
+
+
+def chunk_width(cfg, bucket: int) -> int:
+    return min(bucket, cfg.scan_chunk)            # jitlint: ignore[JL007]
+
+
+def hand_tuned(cfg):
+    return cfg.replace(remat=False)               # jitlint: ignore[JL007]

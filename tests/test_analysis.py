@@ -32,6 +32,7 @@ CASES = REPO / "tests" / "analysis_cases"
 CASE_OPTIONS = {
     "case_config_literal": {"config-literal": {"paths": ["*"]}},
     "case_pallas_spec": {"pallas-spec": {"paths": ["*"]}},
+    "case_policy_knob": {"policy-owned-knob": {"paths": ["*"]}},
 }
 
 VIOLATION_CASES = [
@@ -41,6 +42,7 @@ VIOLATION_CASES = [
     "case_optional_dep",
     "case_pallas_spec",
     "case_compile_inventory",
+    "case_policy_knob",
 ]
 
 _MARKER_RE = re.compile(r"#\s*expect\[(JL\d{3})\]")
@@ -111,6 +113,18 @@ def test_engine_compile_inventory_is_clean():
                         rules=[get_rule("JL006")])
     assert result.findings == [], "\n".join(
         f.render() for f in result.findings)
+
+
+def test_serve_layer_owns_no_knobs():
+    """serve/ is the real target of JL007 — the engine must receive kernel
+    variants / chunking only through the oracle's phase-profile overrides,
+    never by reading the knobs itself (placement.py, the owner, is exempt
+    via the rule's default allow_paths)."""
+    result = lint_paths([REPO / "src/repro/serve"], root=REPO,
+                        rules=[get_rule("JL007")])
+    assert result.findings == [], "\n".join(
+        f.render() for f in result.findings)
+    assert result.files >= 3    # engine, kvpool, placement at minimum
 
 
 def test_unknown_pragma_label_is_reported(tmp_path):
@@ -210,5 +224,6 @@ def test_cli_exit_zero_on_clean_file(tmp_path):
 def test_cli_list_rules():
     proc = _run_cli("--list-rules")
     assert proc.returncode == 0
-    for rule_id in ("JL001", "JL002", "JL003", "JL004", "JL005", "JL006"):
+    for rule_id in ("JL001", "JL002", "JL003", "JL004", "JL005", "JL006",
+                    "JL007"):
         assert rule_id in proc.stdout

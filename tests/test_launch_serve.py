@@ -115,11 +115,54 @@ def test_cli_flags_reach_engine(monkeypatch):
     assert captured["prefix_cache"] is False
     assert captured["mesh"] is None                    # --mesh off default
     assert captured["param_strategy"] == "tp"
+    # default --policy auto: an oracle-resolved PlacementPlan reaches the
+    # engine constructor
+    assert captured["policy"] is not None
+    assert captured["policy"].source == "auto"
     assert captured["warmed"] is True
     assert captured["n_requests"] == 4          # 3 short + 1 long
     # sampling knobs land on every submitted request
     assert all(r.temperature == 0.7 and r.top_k == 5 and r.top_p == 0.9
                for r in captured["reqs"])
+
+
+def test_cli_policy_fixed_reaches_engine(monkeypatch):
+    """--policy fixed must not resolve an oracle plan: the engine receives
+    policy=None and materializes its own fixed_plan from constructor knobs."""
+    captured = {}
+
+    class StubStats:
+        def summary(self):
+            return {}
+
+    class StubEngine:
+        def __init__(self, model, params, **kwargs):
+            captured.update(kwargs)
+            self.buckets = kwargs.get("buckets") or (16, 32)
+            self.prefill_chunk = 32
+            self.stats = StubStats()
+
+        def run(self, reqs):
+            return reqs
+
+    monkeypatch.setattr(serve_mod, "ServeEngine", StubEngine)
+    serve_mod.main(["--arch", "qwen3-0.6b", "--reduced", "--requests", "2",
+                    "--policy", "fixed"])
+    assert captured["policy"] is None
+
+
+def test_cli_policy_dump_smoke(capsys):
+    """--policy-dump prints the resolved plan as JSON and exits before any
+    engine (or model) is built."""
+    import json
+    serve_mod.main(["--arch", "recurrentgemma-2b", "--policy-dump",
+                    "--max-len", "128", "--max-bucket", "32"])
+    plan = json.loads(capsys.readouterr().out)
+    assert plan["arch"] == "recurrentgemma-2b"
+    assert plan["source"] == "auto"
+    assert plan["policies"] and plan["buckets"] == [16, 32]
+    assert set(plan["layer_kinds"]) == {"local", "rec"}
+    assert {"prefill_chunk_s", "decode_step_s"} <= set(plan["predicted"])
 
 
 def test_cli_defaults_parse():
@@ -137,3 +180,5 @@ def test_cli_defaults_parse():
     assert args.temperature == 0.0              # greedy by default
     assert args.top_k == 0
     assert args.top_p == 1.0
+    assert args.policy == "auto"                # oracle placement by default
+    assert args.policy_dump is False

@@ -71,44 +71,43 @@ def measure_arch(arch: str, *, slots: int = 2, max_len: int = 64,
                                            5 + 9 * i % 40).tolist(),
                         max_new_tokens=max_new)
                 for i in range(requests)])
-    st = engine.stats
-    measured = {
-        "prefill_token_s": st.prefill_time_s
-        / max(st.prefill_tokens_computed, 1),
-        "decode_step_s": st.decode_time_s / max(st.decode_steps, 1),
-    }
-    predicted = {
-        # the plan predicts one full prefill chunk; normalize per token so
-        # both sides share units
-        "prefill_token_s": plan.predicted_prefill_s
-        / max(plan.prefill_chunk, 1),
-        "decode_step_s": plan.predicted_decode_s,
-    }
+    # the engine's own drift monitor (obs.drift over the plan summary +
+    # Timed-synchronized phase times) IS the measurement: calibration fits
+    # exactly the numbers the running engine reports in its stats and traces
+    drift = engine.stats.summary()["placement"]["drift"]
+    assert set(drift["phases"]) == {"prefill_token_s", "decode_step_s"}, \
+        (arch, drift)
     return {
         "arch": arch,
         "clusters": list(plan.layer_clusters),
         "prefill_chunk": plan.prefill_chunk,
-        "predicted": predicted,
-        "measured": measured,
+        "predicted": {ph: rec["predicted"]
+                      for ph, rec in drift["phases"].items()},
+        "measured": {ph: rec["measured"]
+                     for ph, rec in drift["phases"].items()},
+        "residual_factors": {ph: rec["residual_factor"]
+                             for ph, rec in drift["phases"].items()},
     }
 
 
 def fit(per_arch: list[dict]) -> dict:
-    """Per-phase log-space scale fit + residuals.
+    """Per-phase log-space scale fit + residuals, through the same
+    ``repro.obs.drift`` arithmetic the engine's live drift monitor uses.
 
     scale = geomean(measured / predicted); residual_factor per arch =
     exp(|log measured - log (scale * predicted)|) >= 1."""
+    from repro.obs.drift import PHASES, geomean, residual_factor
     out = {"phases": {}, "max_residual_factor": 1.0}
-    for phase in ("prefill_token_s", "decode_step_s"):
+    for phase in PHASES:
         ratios = []
         for rec in per_arch:
             pred, meas = rec["predicted"][phase], rec["measured"][phase]
             assert pred > 0 and meas > 0, (rec["arch"], phase, pred, meas)
             ratios.append(meas / pred)
-        scale = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+        scale = geomean(ratios)
         residuals = {}
         for rec, r in zip(per_arch, ratios):
-            factor = math.exp(abs(math.log(r / scale)))
+            factor = residual_factor(r, scale)
             residuals[rec["arch"]] = factor
             out["max_residual_factor"] = max(out["max_residual_factor"],
                                              factor)

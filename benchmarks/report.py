@@ -85,9 +85,69 @@ def perf_variants() -> str:
     return "\n".join(out)
 
 
+def trace_table(path: Path) -> str:
+    """Per-request latency breakdown rendered from a serve trace
+    (``serve_bench.py --trace`` / ``repro.launch.serve --trace``): for each
+    request span, where its wall time went — queueing, prefill (and how many
+    chunks), decode-resident time — plus stall hits.  The same numbers
+    Perfetto shows on the slot tracks, in review-pasteable form."""
+    doc = json.loads(Path(path).read_text())
+    events = doc["traceEvents"]
+    tracks = {e["tid"]: e["args"]["name"] for e in events
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    reqs: dict = {}
+
+    def rec(args):
+        return reqs.setdefault(args["rid"], {
+            "slot": "-", "prompt": "-", "prefix_hit": 0, "queue_ms": 0.0,
+            "prefill_ms": 0.0, "chunks": 0, "span_ms": "-", "tokens": "-",
+            "stalls": 0, "_b": None, "_e": None})
+
+    for e in events:
+        args = e.get("args") or {}
+        if "rid" not in args:
+            continue
+        r = rec(args)
+        if e["ph"] == "B":
+            r.update(slot=tracks.get(e["tid"], e["tid"]),
+                     prompt=args["prompt_tokens"],
+                     prefix_hit=args.get("prefix_hit_tokens", 0),
+                     queue_ms=1e3 * args.get("queue_wait_s", 0.0), _b=e["ts"])
+        elif e["ph"] == "E":
+            r.update(tokens=args.get("tokens", "-"), _e=e["ts"])
+        elif e["ph"] == "X" and e["name"] in ("prefill", "prefill_chunk"):
+            r["prefill_ms"] += e["dur"] / 1e3
+            if e["name"] == "prefill_chunk":
+                r["chunks"] += 1
+        elif e["ph"] == "i" and e["name"] == "stall":
+            r["stalls"] += 1
+    out = ["| rid | slot | prompt | prefix hit | queue ms | prefill ms "
+           "| chunks | span ms | tokens | stalls |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for rid in sorted(reqs):
+        r = reqs[rid]
+        span = f"{(r['_e'] - r['_b']) / 1e3:.1f}" \
+            if r["_b"] is not None and r["_e"] is not None else "-"
+        out.append(
+            f"| {rid} | {r['slot']} | {r['prompt']} | {r['prefix_hit']} | "
+            f"{r['queue_ms']:.1f} | {r['prefill_ms']:.1f} | {r['chunks']} | "
+            f"{span} | {r['tokens']} | {r['stalls']} |")
+    dropped = doc.get("otherData", {}).get("dropped_events", 0)
+    if dropped:
+        out.append(f"\n({dropped} events dropped by the ring buffer — "
+                   f"raise Tracer capacity for full spans)")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     import sys
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which == "trace":
+        path = sys.argv[2] if len(sys.argv) > 2 \
+            else ROOT / "results" / "serve_trace.json"
+        print("### Serve trace: per-request breakdown\n")
+        print(trace_table(Path(path)))
+        sys.exit(0)
     if which in ("dryrun", "all"):
         print("### Dry-run table\n")
         print(dryrun_table())

@@ -28,10 +28,15 @@ Gates (all assertions, the acceptance criteria for the serving path):
     over 1-, 2-, and 8-device data-parallel meshes generate tokens identical
     to the unsharded engine, with zero recompiles after warmup and the paged
     pool's per-shard accounting summing exactly to the unsharded totals;
+  * tracing overhead (``trace_overhead_gate``): with the ring tracer ON the
+    warmed engine must hold >= 95% of its tracing-OFF tokens/s on the same
+    trace, generate bitwise-identical tokens, and compile nothing new — the
+    observability layer is paid for in preallocated tuples, not throughput;
   * regression (``--compare results/serve_bench_baseline.json``): tokens/s
-    must stay within 20% of the committed baseline and no gate metric
-    (recompiles, prefix hit rate, peak blocks, decode stalls) may regress;
-    the diff is written next to ``--json`` for the CI artifact.
+    must stay within 20% of the committed baseline, tracing overhead within
+    the 5% budget, and no gate metric (recompiles, prefix hit rate, peak
+    blocks, decode stalls) may regress; the diff is written next to
+    ``--json`` for the CI artifact.
 
   PYTHONPATH=src python benchmarks/serve_bench.py
   PYTHONPATH=src python benchmarks/serve_bench.py --arch recurrentgemma-2b \\
@@ -49,6 +54,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import numpy as np
 
 VERIFY_ARCHS = ("qwen3-0.6b", "recurrentgemma-2b", "falcon-mamba-7b")
+
+# tracing-on tokens/s may sit at most this fraction below tracing-off
+TRACE_OVERHEAD_BOUND = 0.05
 
 
 def make_trace(n: int, vocab: int, lengths: list[int], max_new: int,
@@ -356,6 +364,50 @@ def sharded_serve_gate(max_new: int = 6) -> dict:
     return out
 
 
+def trace_overhead_gate(engine, trace_fn, reps: int = 2) -> dict:
+    """Tracing must cost ring-buffer tuples, not throughput.
+
+    On the already-warmed bench engine, runs the same trace with the tracer
+    OFF and ON (``reps`` times each, best tokens/s per mode absorbs CI
+    scheduler noise) and asserts (a) tracing-on throughput stays >= 95% of
+    tracing-off, (b) generated tokens are bitwise identical — the tracer
+    observes the tick loop, it must not perturb it, and (c) zero prefill/
+    decode recompiles across every run: emitting events compiles nothing.
+    """
+    tracer = engine.tracer
+    was_enabled = tracer.enabled
+    before = engine.stats.summary()
+    best_tps = {False: 0.0, True: 0.0}
+    tokens = {}
+    for enabled in (False, True) * reps:
+        tracer.enabled = enabled
+        engine.reset_stats()
+        done = engine.run(trace_fn())
+        s = engine.stats.summary()
+        best_tps[enabled] = max(best_tps[enabled], s["tokens_per_s"])
+        tokens[enabled] = [r.generated for r in done]
+        tracer.clear()
+    tracer.enabled = was_enabled
+    after = engine.stats.summary()
+    recompiles = (after["prefill_compiles"] - before["prefill_compiles"]) \
+        + (after["decode_compiles"] - before["decode_compiles"])
+
+    assert tokens[True] == tokens[False], \
+        "enabling the tracer changed generated tokens"
+    assert recompiles == 0, \
+        f"{recompiles} recompiles while toggling the tracer"
+    overhead = max(0.0, 1.0 - best_tps[True] / best_tps[False])
+    assert overhead <= TRACE_OVERHEAD_BOUND, (
+        f"tracing overhead {overhead:.1%} exceeds the "
+        f"{TRACE_OVERHEAD_BOUND:.0%} budget: {best_tps[True]:.1f} tokens/s "
+        f"on vs {best_tps[False]:.1f} off")
+    return {"tokens_per_s_off": best_tps[False],
+            "tokens_per_s_on": best_tps[True],
+            "overhead_frac": overhead,
+            "tokens_identical": True,
+            "recompiles_after_warmup": recompiles}
+
+
 # ------------------------------------------------------------ regression gate
 def _report_metrics(report: dict) -> dict:
     """Flatten the gate metrics a baseline records / a compare run checks."""
@@ -369,14 +421,18 @@ def _report_metrics(report: dict) -> dict:
         out.update({"prefix_hit_rate": kv["prefix_hit_rate"],
                     "blocks_peak": kv["blocks_peak"],
                     "decode_stalls": kv["decode_stalls"]})
+    overhead = report.get("trace_overhead")
+    if overhead:
+        out["trace_overhead_frac"] = overhead["overhead_frac"]
     return out
 
 
 def compare_to_baseline(report: dict, baseline: dict,
                         tps_drop: float = 0.20) -> dict:
     """Gate the current run against a committed baseline: tokens/s may not
-    drop more than ``tps_drop`` (20%), and no gate metric may regress —
-    recompiles/stalls/peak-blocks above baseline or hit rate below it."""
+    drop more than ``tps_drop`` (20%), tracing overhead must stay inside its
+    absolute 5% budget, and no gate metric may regress — recompiles/stalls/
+    peak-blocks above baseline or hit rate below it."""
     cur = _report_metrics(report)
     checks = []
 
@@ -399,6 +455,12 @@ def compare_to_baseline(report: dict, baseline: dict,
             continue
         check(name, cur[name] <= baseline[name] if worse_is_higher
               else cur[name] >= baseline[name])
+    if "trace_overhead_frac" in baseline:
+        # absolute budget, not baseline-relative: a lucky 0.1%-overhead
+        # baseline run must not turn ordinary scheduler noise into failures
+        check("trace_overhead_frac",
+              "trace_overhead_frac" in cur
+              and cur["trace_overhead_frac"] <= TRACE_OVERHEAD_BOUND)
     return {"ok": all(c["ok"] for c in checks), "tps_drop_allowed": tps_drop,
             "checks": checks}
 
@@ -426,6 +488,12 @@ def main() -> None:
                     help="run ONLY the multi-device sharded gate (needs >= 8 "
                          "devices; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--trace", default="",
+                    help="write the measured phase's Chrome trace-event JSON "
+                         "here (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable the ring tracer for the whole run (the "
+                         "overhead gate still toggles it to measure cost)")
     ap.add_argument("--compare", default="",
                     help="baseline JSON (results/serve_bench_baseline.json): "
                          "fail on >20%% tokens/s drop or any gate-metric "
@@ -439,6 +507,8 @@ def main() -> None:
         ap.error("--sharded is a standalone gate (token identity, not "
                  "throughput); run --compare/--write-baseline on the "
                  "standard bench")
+    if args.trace and args.no_trace:
+        ap.error("--trace needs the tracer on; drop --no-trace")
     if args.sharded:
         report = {"sharded": sharded_serve_gate()}
         out = json.dumps(report, indent=1)
@@ -459,6 +529,8 @@ def main() -> None:
                           max_prefill_batch=args.max_prefill_batch,
                           plan_cfg=get_config(args.arch),
                           policy=args.policy)
+    if args.no_trace:
+        engine.tracer.enabled = False
     # short lengths spanning >= 3 buckets, plus prompts long enough to need
     # ~4 chunk-continuation calls each
     assert len(engine.buckets) >= 3, (
@@ -486,8 +558,11 @@ def main() -> None:
                           args.max_new, seed=0))
     baseline = engine.stats.summary()
 
-    # measured phase: mixed trace with long (chunked) prompts
+    # measured phase: mixed trace with long (chunked) prompts.  The ring is
+    # cleared first so --trace captures exactly this phase (warmup/baseline
+    # events would collide with the measured trace's request ids)
     engine.reset_stats()
+    engine.tracer.clear()
     engine.run(make_trace(args.requests, cfg.vocab_size, mixed_lengths,
                           args.max_new, seed=1))
     s = engine.stats.summary()
@@ -512,6 +587,17 @@ def main() -> None:
         "ticks": ticks,
         "recompiles_after_warmup": recompiles,
     }
+    # snapshot the measured phase's trace BEFORE the overhead gate below
+    # clears the ring buffer
+    if args.trace:
+        engine.save_trace(args.trace)
+    report["trace"] = {"enabled": engine.tracer.enabled,
+                       "events": len(engine.tracer),
+                       "dropped_events": engine.tracer.dropped,
+                       "path": args.trace or None}
+    report["trace_overhead"] = trace_overhead_gate(
+        engine, lambda: make_trace(args.requests, cfg.vocab_size,
+                                   mixed_lengths, args.max_new, seed=1))
     if not args.skip_verify:
         report["chunked_identity"] = verify_chunked_identity()
         report["policy_identity"] = policy_identity_gate()

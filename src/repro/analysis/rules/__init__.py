@@ -7,4 +7,5 @@ from . import (  # noqa: F401
     pallas_spec,
     policy_knob,
     recompile_hazard,
+    timing_discipline,
 )

@@ -1,0 +1,100 @@
+"""JL008 timing-discipline: host clocks vs JAX's async dispatch.
+
+``time.perf_counter()`` around a jitted call stamps *dispatch*, not
+execution — the call returns as soon as XLA enqueues the work, so the
+"measured" interval is microseconds of Python while the device still runs.
+This is exactly the under-reporting bug the serving engine's chunked-prefill
+path shipped with until the observability layer routed every timed section
+through :class:`repro.obs.Timed` (which calls ``jax.block_until_ready``
+before stamping ``t1``).
+
+Two checks:
+
+  * a host-clock call (``time.time`` / ``time.perf_counter`` /
+    ``time.monotonic`` and their ``_ns`` variants) inside a *jit-reachable*
+    function — ERROR.  At trace time the clock freezes into the compiled
+    program as a constant; there is no correct use.
+  * a host-side function that brackets work between two or more host-clock
+    calls with no synchronization marker anywhere in its body — WARNING
+    (gates ``--strict``).  Markers: ``jax.block_until_ready``, a ``Timed``
+    section (``Timed(...)`` / ``self._timed(...)`` / ``tm.sync(...)``),
+    ``jax.device_get``, or an ``asarray``/``np.array`` materialization.
+    This is a per-function heuristic, not a dataflow proof: it cannot pair
+    each clock read with its section, so a single marker clears the whole
+    function.  Timing that wraps genuinely blocking host work (``.lower()``
+    / ``.compile()``, file IO) is a legitimate pragma site.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astutil import dotted_name, jit_reachability
+from ..findings import Severity
+from ..registry import Rule, register
+
+_CLOCKS = frozenset({
+    "time.time", "time.perf_counter", "time.monotonic",
+    "time.time_ns", "time.perf_counter_ns", "time.monotonic_ns",
+})
+
+# call-name suffixes that force (or encapsulate) a device sync
+_SYNC_SUFFIXES = ("block_until_ready", "device_get", "asarray", "sync")
+_SYNC_NAMES = frozenset({"Timed", "np.array", "numpy.array"})
+
+
+def _clock_calls(func: ast.AST) -> list:
+    out = []
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call) and dotted_name(node.func) in _CLOCKS:
+            out.append(node)
+    return sorted(out, key=lambda n: (n.lineno, n.col_offset))
+
+
+def _has_sync_marker(func: ast.AST) -> bool:
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name in _SYNC_NAMES:
+            return True
+        bare = name.rsplit(".", 1)[-1]
+        if bare.endswith(_SYNC_SUFFIXES) or bare == "_timed":
+            return True
+    return False
+
+
+@register
+class TimingDiscipline(Rule):
+    id = "JL008"
+    name = "timing-discipline"
+    severity = Severity.ERROR
+
+    def check(self, mod, options):
+        reach = jit_reachability(mod)
+        seen = set()
+        for name in sorted(reach.reachable):
+            for func in reach.functions.get(name, []):
+                seen.add(func)
+                for call in _clock_calls(func):
+                    yield self.finding(
+                        mod, call,
+                        f"host clock `{dotted_name(call.func)}` inside "
+                        f"jit-reachable `{func.name}` freezes into the "
+                        f"traced program as a constant — clock on the host "
+                        f"side of the jit boundary")
+
+        for funcs in reach.functions.values():
+            for func in funcs:
+                if func in seen:
+                    continue
+                clocks = _clock_calls(func)
+                if len(clocks) < 2 or _has_sync_marker(func):
+                    continue
+                yield self.finding(
+                    mod, clocks[1],
+                    f"`{func.name}` times a section between host-clock "
+                    f"reads with no device sync in scope — under JAX's "
+                    f"async dispatch this stamps enqueue time, not "
+                    f"execution; route it through `repro.obs.Timed` and "
+                    f"`sync()` before reading the clock",
+                    severity=Severity.WARNING)

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import argparse
 import json
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -14,6 +15,7 @@ import numpy as np
 from ..configs import get_config, reduced_config
 from ..core.executor import phase_profiles
 from ..models import build_model
+from ..obs import profile_trace
 from ..serve.engine import Request, ServeEngine, prefill_buckets
 from ..serve.placement import ExecutionOracle, PlacementPlan
 
@@ -40,7 +42,8 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
     ``mesh`` shards weights, slot state, and the block pool over a
     (data, model) device mesh (``launch.mesh.make_serve_mesh``);
     ``param_strategy`` picks the weight layout ("tp" Mensa clusters /
-    "dp" replicated).
+    "dp" replicated / "auto" per-cluster from the plan's
+    ``sharding_axis`` — see ``launch.shardings.param_specs``).
 
     ``policy``: "auto" (default) resolves a ``PlacementPlan`` through the
     ExecutionOracle (characterize -> cluster -> cost) and applies its
@@ -139,9 +142,22 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--mp", type=int, default=None,
                     help="model-parallel mesh axis (overrides --mesh; Mensa "
                          "cluster tensor parallelism)")
-    ap.add_argument("--param-strategy", default="tp", choices=("tp", "dp"),
+    ap.add_argument("--param-strategy", default="tp",
+                    choices=("tp", "dp", "auto"),
                     help="weight sharding template on a mesh: Mensa cluster "
-                         "TP or replicated-dp")
+                         "TP, replicated-dp, or 'auto' — per cluster from "
+                         "the placement plan's sharding_axis (memory-centric "
+                         "clusters replicate, compute-centric ones take TP)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON of the run here "
+                         "(view at ui.perfetto.dev); tracing is on either "
+                         "way — this just saves the buffer")
+    ap.add_argument("--profile-dir", default="",
+                    help="collect a jax.profiler trace of the serve loop "
+                         "into this directory (TensorBoard/XLA view)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the final stats summary (including the "
+                         "versioned obs metrics section) as JSON here")
     ap.add_argument("--policy", default="auto", choices=("auto", "fixed"),
                     help="'auto': the placement oracle characterizes and "
                          "clusters the served layers and picks kernel "
@@ -230,8 +246,18 @@ def main(argv=None) -> None:
                          temperature=args.temperature, top_k=args.top_k,
                          top_p=args.top_p)
                  for i in range(args.long_prompts)]
-    engine.run(reqs)
-    print(json.dumps(engine.stats.summary(), indent=1))
+    with profile_trace(args.profile_dir):
+        engine.run(reqs)
+    summary = engine.stats.summary()
+    print(json.dumps(summary, indent=1))
+    if args.trace:
+        engine.save_trace(args.trace)
+        print(f"[serve] trace written to {args.trace} "
+              f"({len(engine.tracer)} events, {engine.tracer.dropped} "
+              f"dropped) — load at ui.perfetto.dev")
+    if args.metrics_json:
+        Path(args.metrics_json).write_text(json.dumps(summary, indent=1)
+                                           + "\n")
 
 
 if __name__ == "__main__":

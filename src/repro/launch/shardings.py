@@ -97,24 +97,83 @@ def _names_from_path(path) -> list[str]:
     return names
 
 
+# parameter-name families, used to route each leaf to the block kinds whose
+# ExecutionPolicy governs it under strategy="auto" (plan-aware sharding)
+_ATTN_PARAMS = frozenset(
+    {"wq", "wk", "wv", "wo", "bq", "bk", "bv"})
+_REC_PARAMS = frozenset(
+    {"w_x", "w_y", "in_proj", "dt_proj", "w_a", "w_i", "conv_w", "lambda",
+     "dt_bias", "d_skip", "a_log", "w_h", "b", "out_proj", "x_proj"})
+_FAMILY_KINDS = {
+    "attn": ("attn", "local", "dec", "enc"),
+    "rec": ("rec", "ssm"),
+    "ffn": ("ffn",),
+}
+
+
+def _family_of(names: list[str]) -> str | None:
+    name = names[-1]
+    if name in _ATTN_PARAMS:
+        return "attn"
+    if name in _REC_PARAMS:
+        return "rec"
+    if "ffn" in names or name in ("w_gate", "w_up", "w_down", "w_in",
+                                  "w_out", "b_in", "b_out"):
+        return "ffn"
+    return None
+
+
+def _plan_family_axes(plan) -> dict:
+    """family -> preferred mesh axis from the plan's per-cluster policies
+    (``ExecutionPolicy.sharding_axis``).  "model" wins when a family spans
+    clusters that disagree; families the plan says nothing about map to
+    None (the TP templates decide)."""
+    out = {}
+    for family, kinds in _FAMILY_KINDS.items():
+        axes = []
+        for k in kinds:
+            pol = plan.policy_for(k)
+            if pol is not None and pol.sharding_axis:
+                axes.append(pol.sharding_axis)
+        out[family] = ("model" if "model" in axes
+                       else (axes[0] if axes else None))
+    return out
+
+
 def param_specs(cfg: ArchConfig, params_shape: PyTree,
-                strategy: str = "tp") -> PyTree:
+                strategy: str = "tp", plan=None) -> PyTree:
     """PartitionSpec tree matching `params_shape` (ShapeDtypeStructs or arrays).
     Stacked (scan) leading axes are padded with None on the left.
 
     strategy:
-      "tp" — the Mensa cluster templates (Pascal-TP / Jacquard / Pavlov).
-      "dp" — pascal_dp plan: every block parameter replicated (batch shards
-             over all mesh axes); embeddings stay Jacquard vocab-sharded.
+      "tp"   — the Mensa cluster templates (Pascal-TP / Jacquard / Pavlov).
+      "dp"   — pascal_dp plan: every block parameter replicated (batch shards
+               over all mesh axes); embeddings stay Jacquard vocab-sharded.
+      "auto" — per-cluster, from ``plan`` (a ``serve.placement.PlacementPlan``):
+               families whose policy prefers the "data" axis (memory-centric
+               clusters — they scale by replication over slots) drop to
+               replicated specs, families preferring "model" keep the TP
+               templates.  Embeddings always stay Jacquard vocab-sharded
+               (the table must never be replicated).  A plan with no
+               policies (``fixed_plan``) degrades to plain "tp".
     """
+    if strategy == "auto" and plan is None:
+        raise ValueError('param_specs(strategy="auto") needs a PlacementPlan '
+                         "(build the engine with a policy, or pass plan=...)")
+    family_axes = _plan_family_axes(plan) if strategy == "auto" else {}
     is_moe = cfg.ffn_kind == "moe"
     blockdiag = getattr(cfg, "rglru_gate_blocks", 0) > 0
     dense_2d = cfg.param_count() > 20e9
 
     def spec(path, leaf):
         names = _names_from_path(path)
-        if strategy == "dp" and names[-1] not in ("embed", "lm_head"):
-            return P(*((None,) * len(leaf.shape)))
+        if names[-1] not in ("embed", "lm_head"):
+            if strategy == "dp":
+                return P(*((None,) * len(leaf.shape)))
+            if strategy == "auto":
+                fam = _family_of(names)
+                if fam is not None and family_axes.get(fam) == "data":
+                    return P(*((None,) * len(leaf.shape)))
         base = _base_spec(names, leaf, is_moe, blockdiag, dense_2d)
         pad = len(leaf.shape) - len(base)
         if pad < 0:       # scalar-ish leaf with generic base

@@ -1,0 +1,22 @@
+"""Serving observability: tracing, synchronized timing, metrics, drift.
+
+The pieces (each its own module, importable without the rest):
+
+* :mod:`repro.obs.trace`   — ring-buffered event tracer, Chrome trace export
+* :mod:`repro.obs.timing`  — ``Timed`` device-synchronized sections,
+  ``profile_trace`` (``jax.profiler``) hook
+* :mod:`repro.obs.metrics` — counters + log2-histogram registry (the
+  versioned ``obs`` section of ``EngineStats.summary()``)
+* :mod:`repro.obs.drift`   — measured-vs-predicted placement residuals,
+  shared with ``benchmarks/calibrate.py``
+
+See docs/observability.md for the event vocabulary and schema.
+"""
+from .metrics import OBS_SCHEMA_VERSION, Counter, Histogram, MetricsRegistry
+from .timing import Timed, profile_trace
+from .trace import Tracer
+
+__all__ = [
+    "OBS_SCHEMA_VERSION", "Counter", "Histogram", "MetricsRegistry",
+    "Timed", "profile_trace", "Tracer",
+]

@@ -1,0 +1,154 @@
+"""Serving metrics registry: counters + fixed-bucket log2 histograms.
+
+The registry replaces ad-hoc windowed sample lists in ``EngineStats``.  Each
+histogram keeps a preallocated array of log2 buckets (bucket ``i`` covers
+``[base * 2**(i-1), base * 2**i)``; bucket 0 is everything below ``base``)
+next to exact streaming aggregates (count / sum / min / max), so recording a
+sample is O(1) with no growth, percentiles stay available forever on a
+long-lived engine, and serialization is a fixed-size dict however much
+traffic flowed through.  Quantiles interpolate inside the landing bucket and
+are clamped to the exact [min, max] envelope — within one bucket width
+(a factor of 2 at ``base=1e-6``-grained latencies) of the true value.
+
+``MetricsRegistry.to_dict()`` is the versioned ``obs`` section of
+``EngineStats.summary()``; bump ``OBS_SCHEMA_VERSION`` on any shape change.
+"""
+from __future__ import annotations
+
+import math
+
+#: version of the serialized ``obs`` stats section (see docs/observability.md)
+OBS_SCHEMA_VERSION = 1
+
+
+class Counter:
+    """Monotonic counter."""
+
+    __slots__ = ("name", "unit", "value")
+
+    def __init__(self, name: str, unit: str = ""):
+        self.name = name
+        self.unit = unit
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def to_dict(self) -> dict:
+        return {"unit": self.unit, "value": self.value}
+
+
+class Histogram:
+    """Fixed-size log2 histogram with exact streaming aggregates.
+
+    ``base`` is the resolution floor: bucket 0 counts samples below it,
+    bucket ``i >= 1`` counts ``[base * 2**(i-1), base * 2**i)``, and the last
+    bucket absorbs everything above the range.  64 buckets at ``base=1e-6``
+    span microseconds to ~290 years of latency.
+    """
+
+    __slots__ = ("name", "unit", "base", "nbuckets", "counts",
+                 "count", "sum", "min", "max")
+
+    def __init__(self, name: str, *, base: float = 1e-6, nbuckets: int = 64,
+                 unit: str = "s"):
+        if base <= 0 or nbuckets < 2:
+            raise ValueError(f"need base > 0 and >= 2 buckets, got "
+                             f"{base} x {nbuckets}")
+        self.name = name
+        self.unit = unit
+        self.base = base
+        self.nbuckets = nbuckets
+        self.counts = [0] * nbuckets
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def bucket_of(self, v: float) -> int:
+        if v < self.base:
+            return 0
+        # frexp: v/base = m * 2**e with m in [0.5, 1) -> floor(log2) == e - 1,
+        # so values in [base * 2**(i-1), base * 2**i) land in bucket i
+        e = math.frexp(v / self.base)[1]
+        return min(self.nbuckets - 1, max(0, e))
+
+    def record(self, v: float) -> None:
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        self.counts[self.bucket_of(v)] += 1
+
+    def bucket_lo(self, i: int) -> float:
+        return 0.0 if i == 0 else self.base * 2.0 ** (i - 1)
+
+    def bucket_hi(self, i: int) -> float:
+        return self.base * 2.0 ** i
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Approximate quantile: linear interpolation inside the landing
+        bucket, clamped to the exact [min, max] envelope."""
+        if not self.count:
+            return 0.0
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        rank = q * self.count
+        seen = 0.0
+        for i, n in enumerate(self.counts):
+            if not n:
+                continue
+            if seen + n >= rank:
+                frac = min(1.0, max(0.0, (rank - seen) / n))
+                lo, hi = self.bucket_lo(i), self.bucket_hi(i)
+                return min(self.max, max(self.min, lo + (hi - lo) * frac))
+            seen += n
+        return self.max
+
+    def to_dict(self) -> dict:
+        return {
+            "unit": self.unit,
+            "base": self.base,
+            "nbuckets": self.nbuckets,
+            "count": self.count,
+            "sum": self.sum,
+            "min": self.min if self.count else 0.0,
+            "max": self.max if self.count else 0.0,
+            # sparse: only occupied buckets, keyed by bucket index
+            "buckets": {str(i): n for i, n in enumerate(self.counts) if n},
+        }
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named counters and histograms."""
+
+    def __init__(self):
+        self._counters: dict[str, Counter] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str, unit: str = "") -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name, unit)
+        return c
+
+    def histogram(self, name: str, **kw) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(name, **kw)
+        return h
+
+    def to_dict(self) -> dict:
+        return {
+            "version": OBS_SCHEMA_VERSION,
+            "counters": {k: c.to_dict()
+                         for k, c in sorted(self._counters.items())},
+            "histograms": {k: h.to_dict()
+                           for k, h in sorted(self._histograms.items())},
+        }

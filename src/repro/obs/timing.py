@@ -1,0 +1,88 @@
+"""Device-synchronized timing sections.
+
+JAX dispatches asynchronously: ``t1 - t0`` around a jitted call measures how
+long *enqueueing* took, not the computation — on an accelerator the gap is
+orders of magnitude (the dispatch returns in microseconds while the program
+runs for milliseconds).  Every duration the serving stack reports must
+therefore block on the program's outputs before the closing stamp.  ``Timed``
+packages that discipline:
+
+    with Timed("decode") as tm:
+        out, states = program(...)
+        out = tm.sync(out)          # block_until_ready BEFORE the stamp
+    stats.decode_time_s += tm.dur
+
+jitlint rule JL008 (timing-discipline) statically rejects raw
+``time.perf_counter()`` pairs around device work; routing through ``Timed``
+(whose ``sync`` is the one sanctioned blocking point) is the fix it suggests.
+
+``profile=True`` additionally wraps the section in a
+``jax.profiler.TraceAnnotation`` so engine spans line up with XLA's own
+timeline when serving runs under ``--profile-dir``
+(:func:`profile_trace`).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+import jax
+
+
+class Timed:
+    """Context manager timing one device-synchronized section.
+
+    Attributes after the block: ``t0`` / ``t1`` (clock stamps), ``dur``
+    (seconds), ``synced`` (whether :meth:`sync` ran — callers timing device
+    work must call it on the program outputs, or the duration only covers
+    dispatch).
+    """
+
+    __slots__ = ("name", "profile", "t0", "t1", "dur", "synced", "_clock",
+                 "_ann")
+
+    def __init__(self, name: str = "", *, profile: bool = False,
+                 clock=time.perf_counter):
+        self.name = name
+        self.profile = profile
+        self._clock = clock
+        self.t0 = self.t1 = self.dur = 0.0
+        self.synced = False
+        self._ann = None
+
+    def __enter__(self) -> "Timed":
+        if self.profile:
+            self._ann = jax.profiler.TraceAnnotation(self.name or "timed")
+            self._ann.__enter__()
+        self.t0 = self._clock()
+        return self
+
+    def sync(self, out):
+        """Block until ``out`` (any pytree of arrays) is computed; returns it.
+        Call on the program outputs before the block closes."""
+        out = jax.block_until_ready(out)
+        self.synced = True
+        return out
+
+    def __exit__(self, *exc) -> bool:
+        if self._ann is not None:
+            self._ann.__exit__(*exc)
+            self._ann = None
+        self.t1 = self._clock()
+        self.dur = self.t1 - self.t0
+        return False
+
+
+@contextmanager
+def profile_trace(profile_dir):
+    """Run the body under ``jax.profiler`` trace collection when
+    ``profile_dir`` is truthy (no-op otherwise): the XLA-level companion to
+    the engine's own Chrome trace, viewable in TensorBoard/Perfetto."""
+    if not profile_dir:
+        yield
+        return
+    jax.profiler.start_trace(str(profile_dir))
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

@@ -57,10 +57,22 @@ decode steps memory-centric (Jacquard/Pavlov clusters); the engine keeps them
 as separate jitted programs so each lowers with its own strategy — pass
 ``prefill_model`` / ``decode_model`` built from per-phase
 ``core.executor.execution_profile`` overrides to specialize each program.
+
+The engine is *observable by default* (repro/obs): every request's lifecycle
+(submit → admit → prefill/chunk → decode → stall → finish/abort) lands in a
+ring-buffered :class:`~repro.obs.Tracer` — one track per slot, per-tick
+counter tracks, exportable as Chrome trace-event JSON via
+:meth:`ServeEngine.save_trace` — and every duration is stamped through
+:class:`~repro.obs.Timed`, which blocks on the program outputs first (JAX
+dispatch is async; an unsynchronized stamp times the enqueue, not the
+compute).  The engine never reads ``time.perf_counter`` directly: all stamps
+come from the tracer's clock, so spans, stats, and TTFTs share one timeline
+(statically enforced by jitlint JL008).  Aggregates go to the
+``EngineStats.metrics`` registry (log2 histograms + counters), serialized as
+the versioned ``obs`` section of ``summary()``.
 """
 from __future__ import annotations
 
-import time
 import warnings
 from collections import deque
 from dataclasses import dataclass, field
@@ -72,11 +84,14 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..models.attention import PagedKVCache
 from ..models.transformer import Model
+from ..obs import MetricsRegistry, Timed, Tracer
+from ..obs.drift import drift_report, plan_predictions
 from .kvpool import PagedKVManager
 from .sampling import sample_tokens
 
-# TTFT samples kept for windowed percentiles (mean/max stay exact streaming)
-TTFT_WINDOW = 8192
+#: tracer track ids: queue-level request events on 0, slot ``i`` on ``1 + i``,
+#: engine-wide spans (decode ticks, warmup) on ``1 + slots``
+TRACK_REQUESTS = 0
 
 
 # ------------------------------------------------------------------- buckets
@@ -123,13 +138,15 @@ class EngineStats:
     prefill_time_s: float = 0.0
     decode_steps: int = 0
     decode_time_s: float = 0.0
-    # TTFT: count/sum/max are exact streaming aggregates; ttft_s keeps only
-    # the most recent TTFT_WINDOW..2*TTFT_WINDOW samples so percentiles are
-    # *windowed* (recent-traffic) on long-lived engines, never silently biased
-    ttft_s: list = field(default_factory=list)
+    # TTFT: count/sum/max are exact streaming aggregates; percentiles come
+    # from the fixed-size log2 histogram in ``metrics`` (O(1) memory on
+    # long-lived engines, within one bucket width of exact)
     ttft_count: int = 0
     ttft_sum: float = 0.0
     ttft_max: float = 0.0
+    # counters + log2 histograms (TTFT, per-tick decode latency, tokens/tick,
+    # prefill padding waste) — the versioned ``obs`` section of summary()
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
     occupancy_sum: float = 0.0          # sum over ticks of busy/slots
     ticks: int = 0
     bucket_counts: dict = field(default_factory=dict)
@@ -162,9 +179,7 @@ class EngineStats:
         self.ttft_sum += v
         if v > self.ttft_max:
             self.ttft_max = v
-        self.ttft_s.append(v)
-        if len(self.ttft_s) >= 2 * TTFT_WINDOW:        # amortized O(1) trim
-            del self.ttft_s[:len(self.ttft_s) - TTFT_WINDOW]
+        self.metrics.histogram("ttft_s").record(v)
 
     def summary(self) -> dict:
         dec_ms = 1e3 * self.decode_time_s / max(self.decode_steps, 1)
@@ -177,8 +192,7 @@ class EngineStats:
             "ttft_ms": {
                 "mean": 1e3 * self.ttft_sum / self.ttft_count
                 if self.ttft_count else 0.0,           # exact
-                "p50": 1e3 * float(np.median(self.ttft_s))
-                if self.ttft_s else 0.0,               # windowed
+                "p50": 1e3 * self.metrics.histogram("ttft_s").quantile(0.5),
                 "max": 1e3 * self.ttft_max,            # exact
             },
             "decode_step_ms": dec_ms,
@@ -222,8 +236,9 @@ class EngineStats:
                 out["kv"]["in_use_per_shard"] = list(self.kv_in_use_per_shard)
                 out["kv"]["peak_per_shard"] = list(self.kv_peak_per_shard)
         if self.placement:
-            # plan (predicted) + measured, side by side — the pair
-            # benchmarks/calibrate.py fits the cost model against
+            # plan (predicted) + measured + drift, side by side — the triple
+            # benchmarks/calibrate.py fits the cost model against (same
+            # obs.drift arithmetic, so the numbers agree exactly)
             p = dict(self.placement)
             p["measured"] = {
                 "prefill_call_s": self.prefill_time_s
@@ -233,7 +248,9 @@ class EngineStats:
                 "decode_step_s": self.decode_time_s
                 / max(self.decode_steps, 1),
             }
+            p["drift"] = drift_report(plan_predictions(p), p["measured"])
             out["placement"] = p
+        out["obs"] = self.metrics.to_dict()
         return out
 
 
@@ -272,7 +289,9 @@ class ServeEngine:
                  param_strategy: str = "tp",
                  prefill_model: Model | None = None,
                  decode_model: Model | None = None,
-                 policy=None):
+                 policy=None,
+                 tracer: Tracer | None = None,
+                 profile: bool = False):
         """``greedy`` is a legacy knob: sampling is now per-request
         (Request.temperature/top_k/top_p/seed) and greedy stays the exact
         default, so both values are accepted and equivalent.
@@ -302,8 +321,21 @@ class ServeEngine:
         are applied by the caller when building ``prefill_model`` /
         ``decode_model`` (see ``launch.serve.build_engine``).  Plans are
         resolved before any program compiles and never consulted per tick,
-        so the zero-recompile invariant is untouched."""
+        so the zero-recompile invariant is untouched.
+
+        ``param_strategy``: "tp" (Mensa cluster templates), "dp"
+        (replicated blocks), or "auto" — route each block family's
+        parameters by its cluster's ``ExecutionPolicy.sharding_axis`` from
+        the plan (memory-centric clusters replicate, compute-centric ones
+        take the TP templates).
+
+        ``tracer``: a :class:`repro.obs.Tracer`; default is a fresh enabled
+        one (pass ``Tracer(enabled=False)`` to opt out).  ``profile=True``
+        wraps each timed section in a ``jax.profiler.TraceAnnotation`` so
+        XLA profiles line up with engine spans."""
         del greedy                      # superseded by per-request sampling
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.profile = profile
         self.model = model
         self.mesh = mesh
         self.slots = slots
@@ -390,7 +422,8 @@ class ServeEngine:
             params = jax.device_put(
                 params, shard_lib.to_named(
                     shard_lib.param_specs(model.cfg, params,
-                                          strategy=param_strategy), mesh))
+                                          strategy=param_strategy,
+                                          plan=self.policy), mesh))
             if self.kv is not None:
                 self._kv_gather_spec = self._make_gather_spec()
         self.params = params
@@ -433,8 +466,18 @@ class ServeEngine:
         self._bt_cache = None
         self._bt_version = -1
         self._samp_cache = None
+        # trace track layout: queue events, one track per slot, engine-wide
+        self.tracer.set_track(TRACK_REQUESTS, "requests")
+        for s in range(slots):
+            self.tracer.set_track(1 + s, f"slot {s}")
+        self._trk_engine = 1 + slots
+        self.tracer.set_track(self._trk_engine, "engine")
         self.stats = EngineStats()
         self._init_kv_stats()
+
+    def _timed(self, name: str) -> Timed:
+        """A Timed section on the tracer's clock (one shared timeline)."""
+        return Timed(name, profile=self.profile, clock=self.tracer.clock)
 
     def _make_gather_spec(self):
         """``batch -> NamedSharding`` routing the paged ops' gathered K/V
@@ -503,6 +546,33 @@ class ServeEngine:
         st.blocks_copied = mgr.stats.blocks_copied
         st.blocks_evicted = mgr.blocks_evicted
 
+    def _tick_counters(self, ts: float, busy: int) -> None:
+        """Per-tick counter-track samples: queue depth, slot occupancy, and
+        (paged) KV-pool in-use/cached, per shard on sharded pools."""
+        tr = self.tracer
+        if not tr.enabled:
+            return
+        tr.counter("queue_depth", ts, (("queued", len(self._queue)),))
+        tr.counter("slots", ts, (("busy", busy),
+                                 ("free", self.slots - busy)))
+        if self.kv is not None:
+            tr.counter("kv_blocks", ts, (("in_use", self.kv.in_use),
+                                         ("cached", self.kv.cached)))
+            if self.kv.shards > 1:
+                tr.counter("kv_in_use_by_shard", ts, tuple(
+                    (f"shard{i}", v)
+                    for i, v in enumerate(self.kv.in_use_by_shard)))
+
+    def save_trace(self, path) -> None:
+        """Write the Chrome trace-event JSON for everything traced so far,
+        with the stats summary's placement section (plan + measured + drift)
+        and the metrics registry embedded under ``otherData``."""
+        summary = self.stats.summary()
+        other = {"obs": summary["obs"]}
+        if "placement" in summary:
+            other["placement"] = summary["placement"]
+        self.tracer.save(path, other_data=other)
+
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
         if not req.prompt:
@@ -521,7 +591,10 @@ class ServeEngine:
             raise ValueError("top_p must be in (0, 1]")
         if req.top_k < 0:
             raise ValueError("top_k must be >= 0 (0 = no top-k filter)")
-        req.t_submit = time.perf_counter()
+        req.t_submit = self.tracer.now()
+        self.tracer.instant("submit", TRACK_REQUESTS, req.t_submit,
+                            (("rid", req.rid),
+                             ("prompt_tokens", len(req.prompt))))
         self._queue.append(req)
 
     def _set_sampling(self, slot: int, req: Request) -> None:
@@ -562,6 +635,7 @@ class ServeEngine:
             req = self._queue[0]
             slot = free[0]
             matched = 0
+            copy = None
             if self.kv is not None:
                 plan = self.kv.admit(slot, req.prompt)
                 if plan is None:
@@ -569,12 +643,22 @@ class ServeEngine:
                     # retry next tick (decode frees blocks as requests end)
                     break
                 matched = plan.matched_tokens
-                if plan.copy is not None:
-                    self._run_copy(*plan.copy)
+                copy = plan.copy
             self._queue.popleft()
             free.pop(0)
             self.requests[slot] = req
             self._set_sampling(slot, req)
+            now = self.tracer.now()
+            self.tracer.begin(f"req {req.rid}", 1 + slot, now,
+                              (("rid", req.rid),
+                               ("prompt_tokens", len(req.prompt)),
+                               ("prefix_hit_tokens", matched),
+                               ("queue_wait_s", round(now - req.t_submit, 6))))
+            if copy is not None:
+                self.tracer.instant("cow_copy", 1 + slot, now,
+                                    (("rid", req.rid), ("src", copy[0]),
+                                     ("dst", copy[1])))
+                self._run_copy(*copy)
             admitted += 1
             if matched > 0 or len(req.prompt) > self.buckets[-1]:
                 # chunked path: long prompts, and prefix-cache hits of any
@@ -707,16 +791,18 @@ class ServeEngine:
         slots_real = [slot for slot, _ in members]
         bt = self._tables_for(slots_real, nb)
         samp = self._samp_rows(slots_real, nb)
-        t0 = time.perf_counter()
-        first, self.states = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(lens),
-            jnp.asarray(slot_ids), self.states, bt, *samp)
-        first = np.asarray(first)            # blocks until the result is ready
-        now = time.perf_counter()
+        with self._timed("prefill") as tm:
+            first, self.states = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                jnp.asarray(slot_ids), self.states, bt, *samp)
+            first = tm.sync(first)           # device sync BEFORE the stamp
+        first = np.asarray(first)
+        now = tm.t1
         st = self.stats
         st.prefill_calls += 1
-        st.prefill_time_s += now - t0
+        st.prefill_time_s += tm.dur
         st.batch_counts[n] = st.batch_counts.get(n, 0) + 1
+        waste = st.metrics.counter("prefill_waste_tokens", "tokens")
         for i, (slot, req) in enumerate(members):
             tok = int(first[i])
             self.positions[slot] = len(req.prompt)
@@ -726,6 +812,10 @@ class ServeEngine:
             st.prefill_prompt_tokens += len(req.prompt)
             st.prefill_tokens_computed += len(req.prompt)
             st.prefill_padded_tokens += bucket
+            waste.inc(bucket - len(req.prompt))
+            self.tracer.span("prefill", 1 + slot, tm.t0, tm.t1,
+                             (("rid", req.rid), ("bucket", bucket),
+                              ("rows", n)))
             st.record_ttft(now - req.t_submit)
             st.bucket_counts[bucket] = st.bucket_counts.get(bucket, 0) + 1
             if self.kv is not None:
@@ -743,24 +833,29 @@ class ServeEngine:
         toks[0, :n] = piece
         bt = self._tables_for([slot], 1)
         samp = self._samp_rows([slot], 1)
-        t0 = time.perf_counter()
-        tok, self.states = self._chunk(
-            self.params, jnp.asarray(toks), jnp.asarray(off, jnp.int32),
-            jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
-            self.states, bt, *samp)
+        # every chunk syncs on its sampled token before the stamp: the old
+        # no-sync fast path on intermediate chunks recorded dispatch time as
+        # prefill time (the async-dispatch under-reporting bug) and hid the
+        # chunk's real cost from the per-tick timeline
+        with self._timed("prefill_chunk") as tm:
+            tok, self.states = self._chunk(
+                self.params, jnp.asarray(toks), jnp.asarray(off, jnp.int32),
+                jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32),
+                self.states, bt, *samp)
+            tok = tm.sync(tok)
         st = self.stats
         st.prefill_chunks += 1
         st.prefill_padded_tokens += c
         st.prefill_tokens_computed += n
+        st.prefill_time_s += tm.dur
+        st.metrics.counter("prefill_waste_tokens", "tokens").inc(c - n)
+        self.tracer.span("prefill_chunk", 1 + slot, tm.t0, tm.t1,
+                         (("rid", req.rid), ("offset", off), ("n", n)))
         if off + n < len(req.prompt):
-            # intermediate chunk: don't block on the (unused) token — let the
-            # dispatch overlap with this tick's decode step
             self._prefilling[slot] = off + n
-            st.prefill_time_s += time.perf_counter() - t0
             return
         tok = int(tok)                       # final chunk: sample first token
-        now = time.perf_counter()
-        st.prefill_time_s += now - t0
+        now = tm.t1
         del self._prefilling[slot]
         self.positions[slot] = len(req.prompt)
         req.generated.append(tok)
@@ -779,6 +874,9 @@ class ServeEngine:
         req.done = True
         req.aborted = False
         req.t_done = now
+        self.tracer.end(f"req {req.rid}", 1 + slot, now,
+                        (("rid", req.rid),
+                         ("tokens", len(req.generated))))
         self.requests[slot] = None
         if self.kv is not None:
             # same-tick reclamation: publish the finished sequence for future
@@ -805,33 +903,38 @@ class ServeEngine:
                         jnp.zeros((n,), jnp.int32),
                         jnp.ones((n,), jnp.float32),
                         jnp.zeros((n,), jnp.int32))
-        for b in self.buckets:
-            for nb in self.batch_buckets:
-                _, self.states = self._prefill(
-                    self.params, jnp.zeros((nb, b), jnp.int32),
-                    jnp.ones((nb,), jnp.int32),
-                    jnp.asarray(np.arange(nb) % self.slots, np.int32),
-                    self.states, self._warm_table(nb), *zs(nb))
-        # chunk continuation: reachable for prompts beyond the largest bucket,
-        # and (paged) for any prefix-cache hit
-        if self.max_len - 1 > self.buckets[-1] \
-                or (self.kv is not None and self.kv.prefix_enabled):
-            _, self.states = self._chunk(
-                self.params, jnp.zeros((1, self.prefill_chunk), jnp.int32),
-                jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32),
-                jnp.asarray(0, jnp.int32), self.states,
-                self._warm_table(1), *zs(1))
-        if self._copy is not None:
-            self.states = self._copy(self.states, jnp.asarray(0, jnp.int32),
-                                     jnp.asarray(0, jnp.int32))
-        _, self.states = self._decode(
-            self.params, jnp.zeros((self.slots, 1), jnp.int32), self.states,
-            jnp.asarray(self.positions), self.memory,
-            jnp.zeros((self.slots,), bool), self._warm_table(self.slots),
-            *zs(self.slots))
-        self.states = self.model.init_states(
-            self.slots, self.max_len, **self._state_kw,
-            shardings=self._state_shardings)
+        with self._timed("warmup") as tm:
+            for b in self.buckets:
+                for nb in self.batch_buckets:
+                    _, self.states = self._prefill(
+                        self.params, jnp.zeros((nb, b), jnp.int32),
+                        jnp.ones((nb,), jnp.int32),
+                        jnp.asarray(np.arange(nb) % self.slots, np.int32),
+                        self.states, self._warm_table(nb), *zs(nb))
+            # chunk continuation: reachable for prompts beyond the largest
+            # bucket, and (paged) for any prefix-cache hit
+            if self.max_len - 1 > self.buckets[-1] \
+                    or (self.kv is not None and self.kv.prefix_enabled):
+                _, self.states = self._chunk(
+                    self.params,
+                    jnp.zeros((1, self.prefill_chunk), jnp.int32),
+                    jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32),
+                    jnp.asarray(0, jnp.int32), self.states,
+                    self._warm_table(1), *zs(1))
+            if self._copy is not None:
+                self.states = self._copy(self.states,
+                                         jnp.asarray(0, jnp.int32),
+                                         jnp.asarray(0, jnp.int32))
+            _, self.states = self._decode(
+                self.params, jnp.zeros((self.slots, 1), jnp.int32),
+                self.states, jnp.asarray(self.positions), self.memory,
+                jnp.zeros((self.slots,), bool),
+                self._warm_table(self.slots), *zs(self.slots))
+            self.states = self.model.init_states(
+                self.slots, self.max_len, **self._state_kw,
+                shardings=self._state_shardings)
+            tm.sync(self.states)
+        self.tracer.span("warmup", self._trk_engine, tm.t0, tm.t1)
         if self.kv is not None:
             # the device pool was just re-zeroed: drop every cached prefix
             # that described its old contents
@@ -854,7 +957,7 @@ class ServeEngine:
         mid-prefill slots are frozen by the ``active`` mask).  Paged engines
         extend each slot's block table before the write and stall (freeze) a
         slot for the tick when the pool has no block for it."""
-        t_tick = time.perf_counter()
+        t_tick = self.tracer.now()
         for slot in list(self._prefilling):
             self._advance_chunk(slot)
         self._admit(self.max_prefill_per_step)
@@ -869,6 +972,9 @@ class ServeEngine:
                     ok.append(i)
                 else:
                     self.stats.decode_stalls += 1
+                    self.tracer.instant(
+                        "stall", 1 + i, self.tracer.now(),
+                        (("rid", self.requests[i].rid),))
             if not ok and not self._prefilling:
                 # nothing can decode and nothing mid-prefill will retire:
                 # no block can ever free — fail loudly instead of spinning
@@ -887,7 +993,9 @@ class ServeEngine:
             self.stats.kv_occupancy_sum += (
                 self.kv.in_use / self.kv.pool.num_blocks
                 if self.kv is not None else 0.0)
-            self.stats.wall_time_s += time.perf_counter() - t_tick
+            now = self.tracer.now()
+            self._tick_counters(now, len(busy))
+            self.stats.wall_time_s += now - t_tick
             return
         toks = np.zeros((self.slots, 1), np.int32)
         mask = np.zeros((self.slots,), bool)
@@ -896,15 +1004,21 @@ class ServeEngine:
             toks[i, 0] = self.requests[i].generated[-1] \
                 if self.requests[i].generated else self.requests[i].prompt[-1]
         bt, samp = self._decode_args()
-        t0 = time.perf_counter()
-        nxt, self.states = self._decode(
-            self.params, jnp.asarray(toks), self.states,
-            jnp.asarray(self.positions), self.memory, jnp.asarray(mask), bt,
-            *samp)
+        with self._timed("decode") as tm:
+            nxt, self.states = self._decode(
+                self.params, jnp.asarray(toks), self.states,
+                jnp.asarray(self.positions), self.memory, jnp.asarray(mask),
+                bt, *samp)
+            nxt = tm.sync(nxt)               # device sync BEFORE the stamp
         nxt = np.asarray(nxt, np.int32)
-        now = time.perf_counter()
+        now = tm.t1
         self.stats.decode_steps += 1
-        self.stats.decode_time_s += now - t0
+        self.stats.decode_time_s += tm.dur
+        self.stats.metrics.histogram("decode_tick_s").record(tm.dur)
+        self.stats.metrics.histogram(
+            "tokens_per_tick", base=1.0, unit="tokens").record(len(active))
+        self.tracer.span("decode", self._trk_engine, tm.t0, tm.t1,
+                         (("active", len(active)),))
         for i in active:
             req = self.requests[i]
             self.positions[i] += 1
@@ -918,9 +1032,12 @@ class ServeEngine:
         self.stats.kv_occupancy_sum += (
             self.kv.in_use / self.kv.pool.num_blocks
             if self.kv is not None else 0.0)
+        end = self.tracer.now()
+        self._tick_counters(end, len([r for r in self.requests
+                                      if r is not None]))
         # wall time accumulates per tick so tokens_per_s stays meaningful for
         # callers driving submit()+step() directly instead of run()
-        self.stats.wall_time_s += time.perf_counter() - t_tick
+        self.stats.wall_time_s += end - t_tick
 
     def run(self, requests: list[Request], max_steps: int = 10_000,
             on_truncate: str = "warn") -> list[Request]:
@@ -948,7 +1065,11 @@ class ServeEngine:
             # truncated run() calls over the same survivors
             self.stats.requests_aborted += sum(
                 1 for r in leftovers if not r.aborted)
+            t_abort = self.tracer.now()
             for r in leftovers:
+                if not r.aborted:
+                    self.tracer.instant("abort", TRACK_REQUESTS, t_abort,
+                                        (("rid", r.rid),))
                 r.aborted = True
             msg = (f"run() exhausted max_steps={max_steps} with "
                    f"{len(leftovers)} unfinished requests "

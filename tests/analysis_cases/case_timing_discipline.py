@@ -1,0 +1,43 @@
+"""Seeded JL008 violations: host clocks vs async dispatch.
+
+Never executed — parsed by tests/test_analysis.py only.
+"""
+import time
+
+import jax
+
+
+@jax.jit
+def traced_step(x):
+    t0 = time.perf_counter()                               # expect[JL008]
+    return x * t0
+
+
+def helper(x):
+    # jit-reachable transitively (traced_entry below calls it)
+    return x + time.time()                                 # expect[JL008]
+
+
+@jax.jit
+def traced_entry(x):
+    return helper(x)
+
+
+def dispatch_timed_decode(step, state):
+    """The engine bug this rule exists for: perf_counter around a jitted
+    call with no sync — measures XLA enqueue, not execution."""
+    t0 = time.perf_counter()
+    out = step(state)
+    dur = time.perf_counter() - t0                         # expect[JL008]
+    return out, dur
+
+
+def synced_decode(step, state):
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(step(state))        # synced: clean
+    return out, time.perf_counter() - t0
+
+
+def single_stamp(req):
+    req.t_submit = time.perf_counter()              # one read, no section
+    return req

@@ -1,0 +1,27 @@
+"""Pragma-suppressed twin of case_timing_discipline.py — must lint clean."""
+import time
+
+import jax
+
+
+@jax.jit
+def traced_step(x):
+    t0 = time.perf_counter()                # jitlint: ignore[JL008]
+    return x * t0
+
+
+def helper(x):
+    return x + time.time()                  # jitlint: ignore[timing-discipline]
+
+
+@jax.jit
+def traced_entry(x):
+    return helper(x)
+
+
+def compile_timed(lowered):
+    # blocking host work (AOT compile) — the sanctioned pragma use case
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    dur = time.perf_counter() - t0          # jitlint: ignore[JL008]
+    return compiled, dur

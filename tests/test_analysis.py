@@ -43,6 +43,7 @@ VIOLATION_CASES = [
     "case_pallas_spec",
     "case_compile_inventory",
     "case_policy_knob",
+    "case_timing_discipline",
 ]
 
 _MARKER_RE = re.compile(r"#\s*expect\[(JL\d{3})\]")
@@ -113,6 +114,32 @@ def test_engine_compile_inventory_is_clean():
                         rules=[get_rule("JL006")])
     assert result.findings == [], "\n".join(
         f.render() for f in result.findings)
+
+
+def test_engine_timing_discipline_is_clean():
+    """serve/engine.py is the real target of JL008 — since the async-dispatch
+    fix, every timed section routes through obs.Timed (which syncs before
+    stamping) and the engine holds no direct `time.*` calls at all; this
+    locks both against regressions."""
+    engine = REPO / "src/repro/serve/engine.py"
+    result = lint_paths([engine], root=REPO, rules=[get_rule("JL008")])
+    assert result.findings == [], "\n".join(
+        f.render() for f in result.findings)
+    assert not re.search(r"\btime\.(time|perf_counter|monotonic)\s*\(",
+                         engine.read_text()), \
+        "engine must clock exclusively through tracer.now()/Timed"
+
+
+def test_timing_discipline_severities():
+    """Jit-reachable clock reads are hard errors; the unsynced-section
+    heuristic warns (gates only --strict)."""
+    _, result = _lint_case("case_timing_discipline")
+    sev = {f.line: f.severity for f in result.findings}
+    assert Severity.ERROR in sev.values()
+    assert Severity.WARNING in sev.values()
+    for f in result.findings:
+        if f.severity is Severity.WARNING:
+            assert "async dispatch" in f.message
 
 
 def test_serve_layer_owns_no_knobs():
@@ -225,5 +252,5 @@ def test_cli_list_rules():
     proc = _run_cli("--list-rules")
     assert proc.returncode == 0
     for rule_id in ("JL001", "JL002", "JL003", "JL004", "JL005", "JL006",
-                    "JL007"):
+                    "JL007", "JL008"):
         assert rule_id in proc.stdout

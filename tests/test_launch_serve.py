@@ -182,3 +182,62 @@ def test_cli_defaults_parse():
     assert args.top_p == 1.0
     assert args.policy == "auto"                # oracle placement by default
     assert args.policy_dump is False
+    assert args.trace == ""                     # tracing on, buffer unsaved
+    assert args.profile_dir == ""
+    assert args.metrics_json == ""
+
+
+def test_cli_observability_flags(monkeypatch, tmp_path):
+    """--trace / --metrics-json / --profile-dir / --param-strategy auto all
+    reach their targets: save_trace is called with the path, the metrics
+    JSON lands on disk with the stats summary, the profiler context receives
+    the directory, and the auto weight layout is forwarded to the engine."""
+    import contextlib
+    import json
+
+    captured = {}
+
+    class StubTracer:
+        def __len__(self):
+            return 7
+
+        dropped = 0
+
+    class StubStats:
+        def summary(self):
+            return {"requests_completed": 2,
+                    "obs": {"version": 1, "counters": {}, "histograms": {}}}
+
+    class StubEngine:
+        def __init__(self, model, params, **kwargs):
+            captured.update(kwargs)
+            self.buckets = kwargs.get("buckets") or (16, 32)
+            self.prefill_chunk = 32
+            self.stats = StubStats()
+            self.tracer = StubTracer()
+
+        def run(self, reqs):
+            return reqs
+
+        def save_trace(self, path):
+            captured["trace_path"] = path
+
+    @contextlib.contextmanager
+    def stub_profile(profile_dir):
+        captured["profile_dir"] = profile_dir
+        yield
+
+    monkeypatch.setattr(serve_mod, "ServeEngine", StubEngine)
+    monkeypatch.setattr(serve_mod, "profile_trace", stub_profile)
+    metrics = tmp_path / "metrics.json"
+    serve_mod.main(["--arch", "qwen3-0.6b", "--reduced", "--requests", "2",
+                    "--trace", str(tmp_path / "t.json"),
+                    "--metrics-json", str(metrics),
+                    "--profile-dir", str(tmp_path / "prof"),
+                    "--param-strategy", "auto"])
+    assert captured["trace_path"] == str(tmp_path / "t.json")
+    assert captured["profile_dir"] == str(tmp_path / "prof")
+    assert captured["param_strategy"] == "auto"
+    payload = json.loads(metrics.read_text())
+    assert payload["requests_completed"] == 2
+    assert payload["obs"]["version"] == 1

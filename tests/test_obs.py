@@ -1,0 +1,345 @@
+"""Observability-layer tests: tracer ring/export semantics, histogram math,
+Timed sync discipline, drift arithmetic, and the engine's trace schema —
+valid Chrome trace-event JSON with per-track monotonic timestamps, nested
+request spans, stable request ids across the lifecycle, and deterministic
+event sequences under a fixed seed, across all three state families."""
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.obs import (OBS_SCHEMA_VERSION, Counter, Histogram,
+                       MetricsRegistry, Timed, Tracer)
+from repro.obs.drift import (PHASES, drift_report, geomean, plan_predictions,
+                             residual_factor)
+from repro.serve.engine import Request, ServeEngine
+
+ARCHS = ("qwen3-0.6b", "recurrentgemma-2b", "falcon-mamba-7b")
+
+
+def _tiny_model(arch="qwen3-0.6b", layers=2):
+    cfg = reduced_config(arch)
+    cfg = cfg.replace(num_layers=max(layers, len(cfg.block_pattern)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _trace(cfg, n=4, max_new=3, seed=5):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=rng.randint(1, cfg.vocab_size, 3 + 5 * i).tolist(),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+# ------------------------------------------------------------------- tracer
+def test_tracer_ring_overflow_drops_oldest():
+    tr = Tracer(capacity=4)
+    for i in range(7):
+        tr.instant(f"e{i}", 0, float(i))
+    assert len(tr) == 4
+    assert tr.dropped == 3
+    names = [e[1] for e in tr.events()]
+    assert names == ["e3", "e4", "e5", "e6"]     # oldest three fell out
+    doc = tr.to_chrome()
+    assert doc["otherData"]["dropped_events"] == 3
+    tr.clear()
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_tracer_disabled_emits_nothing():
+    tr = Tracer(enabled=False)
+    tr.span("s", 0, 0.0, 1.0)
+    tr.counter("c", 0.0, (("a", 1),))
+    assert len(tr) == 0
+    doc = tr.to_chrome()
+    # still a valid (empty) document: process metadata only
+    assert all(e["ph"] == "M" for e in doc["traceEvents"])
+
+
+def test_tracer_chrome_export_shape():
+    tr = Tracer()
+    tr.set_track(1, "slot 0")
+    t0 = tr.now()
+    tr.begin("req 7", 1, t0, (("rid", 7),))
+    tr.span("prefill", 1, t0 + 0.001, t0 + 0.002, (("rid", 7),))
+    tr.counter("queue_depth", t0 + 0.001, (("queued", 3),))
+    tr.end("req 7", 1, t0 + 0.003, (("rid", 7), ("tokens", 4)))
+    doc = json.loads(tr.dumps(other_data={"extra": 1}))
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["extra"] == 1
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {m["name"] for m in meta} == {
+        "process_name", "thread_name", "thread_sort_index"}
+    x = next(e for e in evs if e["ph"] == "X")
+    assert x["dur"] == pytest.approx(1000.0)     # 1 ms in microseconds
+    assert x["args"]["rid"] == 7
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert all(e["s"] == "t" for e in inst) or not inst
+    c = next(e for e in evs if e["ph"] == "C")
+    assert c["args"] == {"queued": 3}
+    # B/E pair well ordered
+    b = next(e for e in evs if e["ph"] == "B")
+    e_ = next(e for e in evs if e["ph"] == "E")
+    assert b["ts"] <= e_["ts"] and e_["args"]["tokens"] == 4
+
+
+def test_tracer_export_sorted_even_with_late_spans():
+    """X spans are emitted at t1 but stamped at t0 — export must re-sort so
+    every track reads monotonically."""
+    tr = Tracer()
+    tr.instant("late", 0, 10.0)
+    tr.span("early", 0, 1.0, 2.0)      # emitted after, starts before
+    ts = [e[3] for e in tr.events()]
+    assert ts == sorted(ts)
+
+
+# ------------------------------------------------------------------ metrics
+def test_histogram_bucket_edges_and_quantiles():
+    h = Histogram("lat", base=1.0, nbuckets=8, unit="s")
+    # bucket 0: below base; bucket i: [2**(i-1), 2**i)
+    assert h.bucket_of(0.5) == 0
+    assert h.bucket_of(1.0) == 1
+    assert h.bucket_of(1.99) == 1
+    assert h.bucket_of(2.0) == 2
+    assert h.bucket_of(2.0 ** 30) == 7          # clamped to last bucket
+    for v in (1.0, 1.5, 3.0, 3.5):
+        h.record(v)
+    assert h.count == 4
+    assert h.mean == pytest.approx(9.0 / 4)
+    assert h.min == 1.0 and h.max == 3.5
+    # quantiles clamp to the exact envelope
+    assert h.quantile(0.0) == 1.0
+    assert h.quantile(1.0) == 3.5
+    assert 1.0 <= h.quantile(0.5) <= 3.5
+    d = h.to_dict()
+    assert d["count"] == 4 and d["buckets"] == {"1": 2, "2": 2}
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError):
+        Histogram("bad", base=0.0)
+
+
+def test_registry_get_or_create_and_versioned_dict():
+    reg = MetricsRegistry()
+    reg.counter("waste", unit="tokens").inc(3)
+    reg.counter("waste").inc(2)
+    reg.histogram("ttft_s").record(0.5)
+    assert reg.counter("waste").value == 5
+    d = reg.to_dict()
+    assert d["version"] == OBS_SCHEMA_VERSION
+    assert d["counters"]["waste"] == {"unit": "tokens", "value": 5}
+    assert d["histograms"]["ttft_s"]["count"] == 1
+
+
+def test_counter_basics():
+    c = Counter("n", unit="x")
+    c.inc()
+    c.inc(4)
+    assert c.to_dict() == {"unit": "x", "value": 5}
+
+
+# ------------------------------------------------------------------- timing
+def _double(v):
+    return v * 2
+
+
+def _incr(v):
+    return v + 1
+
+
+_jit_double = jax.jit(_double)
+_jit_incr = jax.jit(_incr)
+
+
+def test_timed_syncs_device_work_before_stamping():
+    x = _jit_double(np.arange(8.0))
+    with Timed("section") as tm:
+        out = tm.sync(_jit_incr(x))
+    assert tm.synced
+    assert tm.dur >= 0.0 and tm.t1 >= tm.t0
+    np.testing.assert_array_equal(np.asarray(out), np.arange(8.0) * 2 + 1)
+
+
+def test_timed_unsynced_section_is_visible():
+    with Timed("section") as tm:
+        pass
+    assert not tm.synced
+
+
+# -------------------------------------------------------------------- drift
+def test_drift_arithmetic():
+    assert geomean([2.0, 8.0]) == pytest.approx(4.0)
+    with pytest.raises(ValueError):
+        geomean([])
+    assert residual_factor(4.0, 4.0) == pytest.approx(1.0)
+    assert residual_factor(8.0, 4.0) == pytest.approx(2.0)
+    assert residual_factor(2.0, 4.0) == pytest.approx(2.0)   # symmetric
+    rep = drift_report({"decode_step_s": 1e-3}, {"decode_step_s": 2e-3})
+    ph = rep["phases"]["decode_step_s"]
+    assert ph["ratio"] == pytest.approx(2.0)
+    assert rep["max_residual_factor"] >= 1.0
+    assert drift_report({}, {}) == {}
+
+
+def test_engine_drift_section_uses_shared_arithmetic():
+    from repro.launch.serve import build_engine
+    cfg, _, params = _tiny_model()
+    engine = build_engine(cfg, params, slots=2, max_len=64, max_bucket=32,
+                          policy="auto")
+    engine.run(_trace(cfg))
+    p = engine.stats.summary()["placement"]
+    drift = p["drift"]
+    assert set(drift["phases"]) == set(PHASES)
+    for ph, rec in drift["phases"].items():
+        assert rec["predicted"] == plan_predictions(p)[ph]
+        assert rec["residual_factor"] == pytest.approx(
+            residual_factor(rec["ratio"], 1.0))
+
+
+# ----------------------------------------------------------- engine schema
+def _run_traced(arch, seed=5, enabled=True, max_new=3):
+    cfg, model, params = _tiny_model(arch)
+    tracer = Tracer(enabled=enabled)
+    engine = ServeEngine(model, params, slots=2, max_len=64, buckets=(8, 16),
+                         prefill_chunk=8, tracer=tracer)
+    engine.run(_trace(cfg, seed=seed, max_new=max_new))
+    return engine
+
+
+def _by_track(events):
+    tracks: dict = {}
+    for e in events:
+        if e["ph"] != "M":
+            tracks.setdefault(e["tid"], []).append(e)
+    return tracks
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_engine_trace_schema(arch):
+    engine = _run_traced(arch)
+    doc = json.loads(engine.tracer.dumps())
+    evs = doc["traceEvents"]
+
+    # track metadata covers every tid in use
+    named = {e["tid"] for e in evs if e["ph"] == "M"
+             and e["name"] == "thread_name"}
+    assert {e["tid"] for e in evs} <= named
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"requests", "slot 0", "slot 1", "engine"} <= names
+
+    # per-track monotonic timestamps
+    for tid, track in _by_track(evs).items():
+        ts = [e["ts"] for e in track]
+        assert ts == sorted(ts), f"track {tid} not monotonic"
+
+    # request spans nest: balanced B/E per slot track, E follows its B
+    for tid, track in _by_track(evs).items():
+        depth = 0
+        for e in track:
+            if e["ph"] == "B":
+                depth += 1
+                assert depth == 1       # one request resident per slot
+            elif e["ph"] == "E":
+                depth -= 1
+                assert depth >= 0
+        assert depth == 0
+
+    # stable rids: every request's submit instant, B span, and E span agree,
+    # and every per-request event carries the rid
+    rids = {e["args"]["rid"] for e in evs
+            if e["ph"] == "i" and e["name"] == "submit"}
+    assert rids == {0, 1, 2, 3}
+    for rid in rids:
+        b = [e for e in evs if e["ph"] == "B" and e["args"]["rid"] == rid]
+        e_ = [e for e in evs if e["ph"] == "E" and e["args"]["rid"] == rid]
+        assert len(b) == 1 and len(e_) == 1
+        assert b[0]["name"] == e_[0]["name"] == f"req {rid}"
+        assert b[0]["tid"] == e_[0]["tid"]       # resident on one slot track
+        assert b[0]["ts"] <= e_[0]["ts"]
+
+    # counters sampled every tick, with the engine's full series vocabulary
+    counters = {e["name"]: e for e in evs if e["ph"] == "C"}
+    assert {"queue_depth", "slots"} <= set(counters)
+    assert set(counters["slots"]["args"]) == {"busy", "free"}
+
+    # decode spans live on the engine track
+    decode = [e for e in evs if e["ph"] == "X" and e["name"] == "decode"]
+    assert decode and len({e["tid"] for e in decode}) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_engine_trace_deterministic_under_seed(arch):
+    """Same seed -> same event sequence (names, tracks, args) modulo
+    timestamps and durations."""
+    def shape(engine):
+        # args keyed *_s are wall-clock durations — timing, not structure
+        return [(ph, name, tid,
+                 tuple((k, v) for k, v in args if not k.endswith("_s")))
+                for ph, name, tid, ts, dur, args in engine.tracer.events()]
+    a = shape(_run_traced(arch, seed=9))
+    b = shape(_run_traced(arch, seed=9))
+    assert a == b
+
+
+def test_engine_trace_disabled_and_empty_paths():
+    engine = _run_traced("qwen3-0.6b", enabled=False)
+    assert len(engine.tracer) == 0
+    doc = json.loads(engine.tracer.dumps())      # still valid JSON
+    assert all(e["ph"] == "M" for e in doc["traceEvents"])
+    # stats stay fully populated with the tracer off
+    s = engine.stats.summary()
+    assert s["requests_completed"] == 4
+    assert s["obs"]["histograms"]["ttft_s"]["count"] == 4
+
+    # engine with no work: empty but well-formed trace, zero-valued obs
+    cfg, model, params = _tiny_model()
+    idle = ServeEngine(model, params, slots=1, max_len=32)
+    json.loads(idle.tracer.dumps())
+    assert idle.stats.summary()["obs"]["version"] == OBS_SCHEMA_VERSION
+
+
+def test_engine_trace_stall_and_save(tmp_path):
+    """A pool-starved engine emits stall instants; save_trace round-trips
+    through disk with the obs summary attached."""
+    cfg, model, params = _tiny_model()
+    # pool of 5 blocks: two 14-token prompts hold 2 blocks each, the first
+    # boundary crossing takes the last free block for slot 0 and stalls
+    # slot 1 (its neighbours' blocks are referenced, so nothing is evictable)
+    # until the short request retires
+    engine = ServeEngine(model, params, slots=2, max_len=40, buckets=(16,),
+                         kv_block_size=8, kv_blocks=5)
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, cfg.vocab_size, 14).tolist() for _ in range(2)]
+    engine.run([Request(rid=0, prompt=prompts[0], max_new_tokens=6),
+                Request(rid=1, prompt=prompts[1], max_new_tokens=18)])
+    assert engine.stats.summary()["kv"]["decode_stalls"] > 0
+    stalls = [e for e in engine.tracer.events() if e[0] == "i"
+              and e[1] == "stall"]
+    assert stalls and all(dict(e[5])["rid"] == 1 for e in stalls)
+    out = tmp_path / "trace.json"
+    engine.save_trace(out)
+    doc = json.loads(out.read_text())
+    assert doc["otherData"]["obs"]["version"] == OBS_SCHEMA_VERSION
+    assert any(e["ph"] == "i" and e["name"] == "stall"
+               for e in doc["traceEvents"])
+
+
+def test_engine_prefill_waste_counter():
+    cfg, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=32, buckets=(16,))
+    engine.run([Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2)])
+    obs = engine.stats.summary()["obs"]
+    # 3-token prompt padded to the 16 bucket: 13 wasted positions
+    assert obs["counters"]["prefill_waste_tokens"]["value"] == 13
+    assert obs["histograms"]["decode_tick_s"]["count"] == \
+        engine.stats.decode_steps
+    assert obs["histograms"]["tokens_per_tick"]["count"] == \
+        engine.stats.decode_steps

@@ -12,7 +12,7 @@ import pytest
 
 from repro.configs import reduced_config
 from repro.models import build_model
-from repro.serve.engine import (TTFT_WINDOW, EngineStats, Request, ServeEngine,
+from repro.serve.engine import (EngineStats, Request, ServeEngine,
                                 bucket_for, prefill_buckets)
 
 
@@ -445,8 +445,9 @@ def test_engine_stats_summary():
     assert s["requests_completed"] == 3
     assert s["tokens_generated"] == 12
     assert s["tokens_per_s"] > 0
-    assert len(engine.stats.ttft_s) == 3
+    assert engine.stats.ttft_count == 3
     assert s["ttft_ms"]["mean"] > 0
+    assert s["obs"]["histograms"]["ttft_s"]["count"] == 3
     assert s["decode_step_ms"] > 0
     assert 0 < s["slot_occupancy"] <= 1
     assert s["prefills"] == 3
@@ -482,29 +483,32 @@ def test_stats_reset_keeps_compile_counts():
     assert engine.stats.prefills == 0 and engine.stats.ticks == 0
 
 
-def test_ttft_stats_exact_mean_max_and_bounded_window():
-    """Regression for the TTFT-trim bias: mean and max stay exact no matter
-    how many samples arrive (streaming aggregates), the kept window stays
-    bounded, and the median handles even-length windows correctly."""
+def test_ttft_stats_exact_mean_max_and_bounded_memory():
+    """The histogram-backed TTFT stats: mean and max stay exact no matter
+    how many samples arrive (streaming aggregates next to the log2 buckets),
+    memory stays fixed-size forever, and the p50 lands within one log2
+    bucket of the true median."""
     st = EngineStats()
-    # even-length median: [1, 3] -> 2, not 3 (the old len//2 index bug)
     st.record_ttft(1.0)
     st.record_ttft(3.0)
-    assert st.summary()["ttft_ms"]["p50"] == pytest.approx(2000.0)
-    # stream far past the window: the biggest/earliest samples fall out of
-    # the window but mean/max must not drift
+    p50 = st.summary()["ttft_ms"]["p50"]
+    assert 1000.0 <= p50 <= 3000.0          # clamped to the exact envelope
+    # stream a lot of samples: no growth, no aggregate drift
     st = EngineStats()
-    n = 2 * TTFT_WINDOW + 500
-    vals = [float(i % 97) + (1000.0 if i == 3 else 0.0) for i in range(n)]
+    n = 10_000
+    vals = [float(i % 97) / 97.0 + (1000.0 if i == 3 else 0.0)
+            for i in range(n)]
     for v in vals:
         st.record_ttft(v)
     assert st.ttft_count == n
-    assert len(st.ttft_s) < 2 * TTFT_WINDOW          # bounded memory
+    hist = st.metrics.histogram("ttft_s")
+    assert len(hist.counts) == hist.nbuckets            # fixed-size forever
     s = st.summary()["ttft_ms"]
     assert s["mean"] == pytest.approx(1e3 * sum(vals) / n)      # exact
     assert s["max"] == pytest.approx(1e3 * max(vals))           # exact
-    # p50 is windowed (recent samples) — documented, and sane
-    assert s["p50"] == pytest.approx(1e3 * float(np.median(st.ttft_s)))
+    # p50 within one log2 bucket (factor of 2) of the true median
+    true_p50 = 1e3 * float(np.median(vals))
+    assert true_p50 / 2 <= s["p50"] <= true_p50 * 2
 
 
 def test_queue_is_deque_and_deep_queue_admits_fifo():

@@ -139,6 +139,39 @@ def trace_table(path: Path) -> str:
     return "\n".join(out)
 
 
+def ledger_table(path: Path) -> str:
+    """The perf ledger's trajectory (``serve_bench --ledger``), one row per
+    run oldest-first, with the rolling-median trend verdict for the newest
+    record — the history the single committed baseline point cannot show."""
+    from repro.obs.ledger import read_ledger, trend_check
+    records = read_ledger(path)
+    if not records:
+        return f"(no ledger at {path})"
+    out = ["| run | git sha | arch | tokens/s | TTFT p50 ms | prefix hit "
+           "| trace ovh | recompiles |",
+           "|---|---|---|---|---|---|---|---|"]
+
+    def fmt(v, spec=".3g"):
+        return format(v, spec) if isinstance(v, (int, float)) else "-"
+
+    for i, r in enumerate(records, start=1):
+        out.append(
+            f"| {i} | {str(r.get('git_sha', '-'))[:9]} | {r.get('arch', '-')}"
+            f" | {fmt(r.get('tokens_per_s'), '.1f')}"
+            f" | {fmt(r.get('ttft_p50_ms'), '.1f')}"
+            f" | {fmt(r.get('prefix_hit_rate'), '.2f')}"
+            f" | {fmt(r.get('trace_overhead_frac'), '.3f')}"
+            f" | {fmt(r.get('recompiles_after_warmup'), 'd')} |")
+    trend = trend_check(records)
+    verdict = "ok" if trend["ok"] else "REGRESSED"
+    checks = ", ".join(
+        f"{c['metric']} {fmt(c['current'], '.1f')} vs median "
+        f"{fmt(c['median'], '.1f')}" for c in trend["checks"])
+    out.append(f"\ntrend ({trend['runs']} runs, band "
+               f"{trend['band']:.0%}): {verdict} — {checks}")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     import sys
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
@@ -147,6 +180,13 @@ if __name__ == "__main__":
             else ROOT / "results" / "serve_trace.json"
         print("### Serve trace: per-request breakdown\n")
         print(trace_table(Path(path)))
+        sys.exit(0)
+    if which == "ledger":
+        sys.path.insert(0, str(ROOT / "src"))
+        path = sys.argv[2] if len(sys.argv) > 2 \
+            else ROOT / "results" / "perf_ledger.jsonl"
+        print("### Perf ledger: run trajectory\n")
+        print(ledger_table(Path(path)))
         sys.exit(0)
     if which in ("dryrun", "all"):
         print("### Dry-run table\n")

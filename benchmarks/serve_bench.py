@@ -32,11 +32,22 @@ Gates (all assertions, the acceptance criteria for the serving path):
     warmed engine must hold >= 95% of its tracing-OFF tokens/s on the same
     trace, generate bitwise-identical tokens, and compile nothing new — the
     observability layer is paid for in preallocated tuples, not throughput;
+  * program accounting (``program_accounting_gate``): the cost observatory
+    covers the warmed inventory exactly — every compiled program carries
+    analyzed static FLOPs/bytes (plus memory watermarks, the bench engine
+    runs ``program_memory=True``), the exercised programs accumulated
+    invocations and device-synchronized seconds, and the oracle-resolved
+    plan's per-cluster rollup lands in the drift section;
   * regression (``--compare results/serve_bench_baseline.json``): tokens/s
     must stay within 20% of the committed baseline, tracing overhead within
     the 5% budget, and no gate metric (recompiles, prefix hit rate, peak
     blocks, decode stalls) may regress; the diff is written next to
-    ``--json`` for the CI artifact.
+    ``--json`` for the CI artifact;
+  * trend (``--ledger results/perf_ledger.jsonl``): after every gate above
+    passes, the run appends one record to the append-only perf ledger and
+    the newest record must stay inside the rolling-median band
+    (``repro.obs.ledger.trend_check``) — history-aware regression tracking
+    on top of the single committed baseline point.
 
   PYTHONPATH=src python benchmarks/serve_bench.py
   PYTHONPATH=src python benchmarks/serve_bench.py --arch recurrentgemma-2b \\
@@ -408,6 +419,53 @@ def trace_overhead_gate(engine, trace_fn, reps: int = 2) -> dict:
             "recompiles_after_warmup": recompiles}
 
 
+def program_accounting_gate(engine, measured: dict) -> dict:
+    """The cost observatory must cover the warmed inventory exactly.
+
+    Asserts (a) the measured summary's ``programs`` section holds precisely
+    the programs ``warmup()`` compiled — every (batch-bucket, bucket)
+    prefill shape, the chunk continuation and block-clone programs when
+    reachable, and the decode step; (b) every entry was statically analyzed
+    (lowered-HLO FLOPs and bytes, and — the bench engine runs with
+    ``program_memory=True`` — compiled memory watermarks); (c) the programs
+    the trace exercised accumulated invocations and device-synchronized
+    seconds, so the roofline rates are live, not vacuous; (d) the
+    oracle-resolved plan's per-cluster rollup reached the drift section.
+    """
+    progs = (measured.get("programs") or {}).get("programs")
+    assert progs, "stats summary carries no programs section"
+    expected = {f"prefill[{nb}x{b}]" for b in engine.buckets
+                for nb in engine.batch_buckets}
+    if engine.max_len - 1 > engine.buckets[-1] \
+            or (engine.kv is not None and engine.kv.prefix_enabled):
+        expected.add("chunk")
+    if engine._copy is not None:
+        expected.add("copy")
+    expected.add("decode")
+    assert set(progs) == expected, (
+        f"programs section does not match the warmed inventory:\n"
+        f"  missing: {sorted(expected - set(progs))}\n"
+        f"  extra:   {sorted(set(progs) - expected)}")
+    bad = [n for n, p in progs.items()
+           if not (p["analyzed"] and p["flops"] > 0
+                   and p["bytes_accessed"] > 0 and "memory" in p)]
+    assert not bad, f"programs without full static cost: {sorted(bad)}"
+    live = [n for n, p in progs.items() if p["invocations"] > 0]
+    assert progs["decode"]["invocations"] > 0, progs["decode"]
+    assert any(n.startswith("prefill[") for n in live), sorted(live)
+    for n in live:
+        p = progs[n]
+        assert p["measured_s"] > 0 and p["flops_per_s"] > 0 \
+            and 0 < p["utilization"] <= 1.0, (n, p)
+    placement = measured.get("placement") or {}
+    if placement.get("policies") and placement.get("drift"):
+        assert "clusters" in placement["drift"], (
+            "oracle-planned engine produced no per-cluster rollup in drift")
+    return {"programs": len(progs), "invoked": sorted(live),
+            "temp_bytes_peak": measured["programs"].get("temp_bytes_peak"),
+            "utilization": {n: progs[n]["utilization"] for n in sorted(live)}}
+
+
 # ------------------------------------------------------------ regression gate
 def _report_metrics(report: dict) -> dict:
     """Flatten the gate metrics a baseline records / a compare run checks."""
@@ -501,6 +559,14 @@ def main() -> None:
     ap.add_argument("--write-baseline", default="",
                     help="write this run's gate metrics as a new baseline")
     ap.add_argument("--json", default="", help="also write the report here")
+    ap.add_argument("--ledger", default="",
+                    help="append this run to the perf ledger "
+                         "(results/perf_ledger.jsonl) after all gates pass, "
+                         "then fail if it falls outside the rolling-median "
+                         "trend band")
+    ap.add_argument("--ledger-band", type=float, default=None,
+                    help="trend band as a fraction of the rolling median "
+                         "(default: repro.obs.ledger.DEFAULT_BAND)")
     args = ap.parse_args()
 
     if args.sharded and (args.compare or args.write_baseline):
@@ -528,7 +594,8 @@ def main() -> None:
                           max_prefill_per_step=args.max_prefill_per_step,
                           max_prefill_batch=args.max_prefill_batch,
                           plan_cfg=get_config(args.arch),
-                          policy=args.policy)
+                          policy=args.policy,
+                          program_memory=True)
     if args.no_trace:
         engine.tracer.enabled = False
     # short lengths spanning >= 3 buckets, plus prompts long enough to need
@@ -595,6 +662,7 @@ def main() -> None:
                        "events": len(engine.tracer),
                        "dropped_events": engine.tracer.dropped,
                        "path": args.trace or None}
+    report["program_accounting"] = program_accounting_gate(engine, s)
     report["trace_overhead"] = trace_overhead_gate(
         engine, lambda: make_trace(args.requests, cfg.vocab_size,
                                    mixed_lengths, args.max_new, seed=1))
@@ -651,6 +719,25 @@ def main() -> None:
         f"decode-step latency regressed during chunked prefill: "
         f"{s['decode_step_ms']:.2f}ms vs baseline "
         f"{baseline['decode_step_ms']:.2f}ms")
+
+    # only gate-passing runs enter the history: the ledger trends healthy
+    # runs, the asserts above catch broken ones
+    if args.ledger:
+        from repro.obs.ledger import (DEFAULT_BAND, append_record,
+                                      read_ledger, record_from_report,
+                                      trend_check)
+        lp = Path(args.ledger)
+        append_record(lp, record_from_report(report))
+        band = args.ledger_band if args.ledger_band is not None \
+            else DEFAULT_BAND
+        trend = trend_check(read_ledger(lp), band=band)
+        print(f"[ledger] {lp}: run {trend['runs']} appended")
+        print(json.dumps(trend, indent=1))
+        assert trend["ok"], (
+            "perf ledger trend check failed — this run fell outside the "
+            "rolling-median band:\n"
+            + json.dumps([c for c in trend["checks"] if not c["ok"]],
+                         indent=1))
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""JL003 api-drift: raw ``.cost_analysis()`` access.
+"""JL003 api-drift: raw ``.cost_analysis()`` / ``.memory_analysis()`` access.
 
 ``compiled.cost_analysis()`` returned a dict for years, then newer JAX made
 it a list with one dict per executable program — code indexing the old shape
@@ -6,7 +6,10 @@ crashes (or worse, silently reads the wrong program).  PR 1 centralized the
 flattening in ``utils/hlo.normalize_cost_analysis``; this rule pins that
 routing: any ``X.cost_analysis()`` call must appear as the *direct argument*
 of ``normalize_cost_analysis(...)`` (or live in ``utils/hlo.py`` itself,
-which owns the normalization).
+which owns the normalization).  ``compiled.memory_analysis()`` drifts the
+same way (``CompiledMemoryStats`` object vs per-program list vs ``None`` on
+backends without it) and gets the same treatment through
+``normalize_memory_analysis``.
 """
 from __future__ import annotations
 
@@ -16,7 +19,11 @@ from ..astutil import dotted_name
 from ..findings import Severity
 from ..registry import Rule, register
 
-_NORMALIZER = "normalize_cost_analysis"
+#: raw accessor -> the utils/hlo normalizer that must wrap it directly
+_NORMALIZERS = {
+    "cost_analysis": "normalize_cost_analysis",
+    "memory_analysis": "normalize_memory_analysis",
+}
 _OWNER_SUFFIX = "utils/hlo.py"
 
 
@@ -30,23 +37,25 @@ class ApiDrift(Rule):
         owner = options.get("owner_suffix", _OWNER_SUFFIX)
         if mod.relpath.endswith(owner):
             return
+        normalizers = set(_NORMALIZERS.values())
         wrapped = set()
         for node in ast.walk(mod.tree):
             if isinstance(node, ast.Call) \
                     and dotted_name(node.func).rsplit(".", 1)[-1] \
-                    == _NORMALIZER:
+                    in normalizers:
                 wrapped.update(id(a) for a in node.args)
         for node in ast.walk(mod.tree):
             if not isinstance(node, ast.Call):
                 continue
             if not (isinstance(node.func, ast.Attribute)
-                    and node.func.attr == "cost_analysis"):
+                    and node.func.attr in _NORMALIZERS):
                 continue
             if id(node) in wrapped:
                 continue
+            accessor = node.func.attr
             yield self.finding(
                 mod, node,
-                "raw `.cost_analysis()` access: the return shape drifts "
-                "across JAX versions — route it through "
-                "`utils.hlo.normalize_cost_analysis(compiled."
-                "cost_analysis())`")
+                f"raw `.{accessor}()` access: the return shape drifts "
+                f"across JAX versions — route it through "
+                f"`utils.hlo.{_NORMALIZERS[accessor]}(compiled."
+                f"{accessor}())`")

@@ -26,7 +26,8 @@ from ..configs import ARCHS, SHAPES, ShapeSpec, applicable, get_config
 from ..models import build_model
 from ..train import optim
 from ..train.trainer import make_train_step
-from ..utils.hlo import normalize_cost_analysis, parse_collectives
+from ..utils.hlo import (normalize_cost_analysis, normalize_memory_analysis,
+                         parse_collectives)
 from . import shardings as sh
 from .mesh import data_axes, make_production_mesh
 
@@ -174,7 +175,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             t_lower = time.time() - t0      # jitlint: ignore[JL008]
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
-            mem = compiled.memory_analysis()
+            mem = normalize_memory_analysis(compiled.memory_analysis())
             cost = normalize_cost_analysis(compiled.cost_analysis())
             hlo = compiled.as_text()
         n_dev = int(np.prod(list(mesh.shape.values())))
@@ -185,7 +186,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             n_devices=n_dev,
             flops=float(cost.get("flops", 0.0)) if cost else 0.0,
             bytes_accessed=float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
-            memory=_mem_dict(mem),
+            memory=mem,
             collectives=coll.to_dict(),
             hlo_bytes=len(hlo),
         )
@@ -203,19 +204,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
               f"ERROR {type(e).__name__}: {e}")
     out_path.write_text(json.dumps(rec, indent=1, default=float))
     return rec
-
-
-def _mem_dict(mem) -> dict:
-    if mem is None:
-        return {}
-    out = {}
-    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
-              "output_size_in_bytes", "temp_size_in_bytes",
-              "alias_size_in_bytes", "peak_memory_in_bytes"):
-        v = getattr(mem, k, None)
-        if v is not None:
-            out[k] = int(v)
-    return out
 
 
 def all_cells() -> list[tuple[str, str, str]]:

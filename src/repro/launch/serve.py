@@ -29,7 +29,7 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
                  prefix_cache: bool = True,
                  mesh=None, param_strategy: str = "tp",
                  plan_cfg=None, profiles=None,
-                 policy="auto") -> ServeEngine:
+                 policy="auto", program_memory: bool = False) -> ServeEngine:
     """Engine with the prefill/decode programs routed through their
     Mensa execution profiles (runtime-safe overrides only — the phase models
     share one parameter tree).  With today's cost model the serve-shape
@@ -86,7 +86,7 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
         mesh=mesh, param_strategy=param_strategy,
         prefill_model=build_model(prefill_cfg) if prefill_cfg != cfg else None,
         decode_model=build_model(decode_cfg) if decode_cfg != cfg else None,
-        policy=plan)
+        policy=plan, program_memory=program_memory)
 
 
 def parse_args(argv=None) -> argparse.Namespace:
@@ -158,6 +158,17 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--metrics-json", default="",
                     help="write the final stats summary (including the "
                          "versioned obs metrics section) as JSON here")
+    ap.add_argument("--metrics-prom", default="",
+                    help="write the metrics registry in Prometheus/"
+                         "OpenMetrics text exposition format here (a "
+                         "node_exporter textfile-collector drop-in)")
+    ap.add_argument("--program-memory",
+                    action=argparse.BooleanOptionalAction, default=False,
+                    help="AOT-compile each warmed program once for its "
+                         "temp/argument/output memory watermarks (the "
+                         "programs section always carries static FLOPs/"
+                         "bytes; this adds the memory_analysis fields at "
+                         "roughly 2x warmup compile time)")
     ap.add_argument("--policy", default="auto", choices=("auto", "fixed"),
                     help="'auto': the placement oracle characterizes and "
                          "clusters the served layers and picks kernel "
@@ -220,7 +231,8 @@ def main(argv=None) -> None:
                           prefix_cache=args.prefix_cache,
                           mesh=mesh, param_strategy=args.param_strategy,
                           profiles=(prefill_prof, decode_prof),
-                          policy=plan if plan is not None else "fixed")
+                          policy=plan if plan is not None else "fixed",
+                          program_memory=args.program_memory)
     if args.warmup:
         engine.warmup()
     rng = np.random.RandomState(0)
@@ -258,6 +270,10 @@ def main(argv=None) -> None:
     if args.metrics_json:
         Path(args.metrics_json).write_text(json.dumps(summary, indent=1)
                                            + "\n")
+    if args.metrics_prom:
+        Path(args.metrics_prom).write_text(
+            engine.stats.metrics.to_prometheus())
+        print(f"[serve] Prometheus metrics written to {args.metrics_prom}")
 
 
 if __name__ == "__main__":

@@ -5,18 +5,29 @@ The pieces (each its own module, importable without the rest):
 * :mod:`repro.obs.trace`   — ring-buffered event tracer, Chrome trace export
 * :mod:`repro.obs.timing`  — ``Timed`` device-synchronized sections,
   ``profile_trace`` (``jax.profiler``) hook
-* :mod:`repro.obs.metrics` — counters + log2-histogram registry (the
-  versioned ``obs`` section of ``EngineStats.summary()``)
+* :mod:`repro.obs.metrics` — counters, gauges + log2-histogram registry (the
+  versioned ``obs`` section of ``EngineStats.summary()``; Prometheus text
+  exposition via ``to_prometheus``)
 * :mod:`repro.obs.drift`   — measured-vs-predicted placement residuals,
   shared with ``benchmarks/calibrate.py``
+* :mod:`repro.obs.programs` — per-program cost registry: static FLOPs/bytes
+  of the warmed inventory + live roofline utilization and cluster rollup
+* :mod:`repro.obs.ledger`  — append-only perf ledger (``perf_ledger.jsonl``)
+  with the rolling-median trend check
 
 See docs/observability.md for the event vocabulary and schema.
 """
-from .metrics import OBS_SCHEMA_VERSION, Counter, Histogram, MetricsRegistry
+from .ledger import LEDGER_SCHEMA_VERSION, append_record, read_ledger, \
+    trend_check
+from .metrics import OBS_SCHEMA_VERSION, Counter, Gauge, Histogram, \
+    MetricsRegistry
+from .programs import PROGRAMS_SCHEMA_VERSION, ProgramRegistry
 from .timing import Timed, profile_trace
 from .trace import Tracer
 
 __all__ = [
-    "OBS_SCHEMA_VERSION", "Counter", "Histogram", "MetricsRegistry",
-    "Timed", "profile_trace", "Tracer",
+    "LEDGER_SCHEMA_VERSION", "OBS_SCHEMA_VERSION", "PROGRAMS_SCHEMA_VERSION",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "ProgramRegistry",
+    "Timed", "Tracer", "append_record", "profile_trace", "read_ledger",
+    "trend_check",
 ]

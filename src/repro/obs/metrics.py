@@ -1,4 +1,4 @@
-"""Serving metrics registry: counters + fixed-bucket log2 histograms.
+"""Serving metrics registry: counters, gauges + fixed-bucket log2 histograms.
 
 The registry replaces ad-hoc windowed sample lists in ``EngineStats``.  Each
 histogram keeps a preallocated array of log2 buckets (bucket ``i`` covers
@@ -12,13 +12,34 @@ are clamped to the exact [min, max] envelope — within one bucket width
 
 ``MetricsRegistry.to_dict()`` is the versioned ``obs`` section of
 ``EngineStats.summary()``; bump ``OBS_SCHEMA_VERSION`` on any shape change.
+``to_prometheus()`` renders the same registry in the Prometheus text
+exposition format (one scrape-able snapshot, counters as ``_total``,
+histograms as cumulative ``le`` buckets) for ``--metrics-prom``.
 """
 from __future__ import annotations
 
 import math
+import re
 
 #: version of the serialized ``obs`` stats section (see docs/observability.md)
-OBS_SCHEMA_VERSION = 1
+#: v2: added the ``gauges`` section (device-memory telemetry)
+OBS_SCHEMA_VERSION = 2
+
+_PROM_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(prefix: str, name: str) -> str:
+    n = _PROM_NAME_RE.sub("_", f"{prefix}_{name}" if prefix else name)
+    return n if not n[:1].isdigit() else f"_{n}"
+
+
+def _prom_num(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    f = float(v)
+    return repr(int(f)) if f.is_integer() and abs(f) < 2 ** 53 else repr(f)
 
 
 class Counter:
@@ -33,6 +54,23 @@ class Counter:
 
     def inc(self, n: int = 1) -> None:
         self.value += n
+
+    def to_dict(self) -> dict:
+        return {"unit": self.unit, "value": self.value}
+
+
+class Gauge:
+    """Last-write-wins instantaneous value (pool bytes, watermarks)."""
+
+    __slots__ = ("name", "unit", "value")
+
+    def __init__(self, name: str, unit: str = ""):
+        self.name = name
+        self.unit = unit
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
 
     def to_dict(self) -> dict:
         return {"unit": self.unit, "value": self.value}
@@ -130,6 +168,7 @@ class MetricsRegistry:
 
     def __init__(self):
         self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, Histogram] = {}
 
     def counter(self, name: str, unit: str = "") -> Counter:
@@ -137,6 +176,12 @@ class MetricsRegistry:
         if c is None:
             c = self._counters[name] = Counter(name, unit)
         return c
+
+    def gauge(self, name: str, unit: str = "") -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name, unit)
+        return g
 
     def histogram(self, name: str, **kw) -> Histogram:
         h = self._histograms.get(name)
@@ -149,6 +194,45 @@ class MetricsRegistry:
             "version": OBS_SCHEMA_VERSION,
             "counters": {k: c.to_dict()
                          for k, c in sorted(self._counters.items())},
+            "gauges": {k: g.to_dict()
+                       for k, g in sorted(self._gauges.items())},
             "histograms": {k: h.to_dict()
                            for k, h in sorted(self._histograms.items())},
         }
+
+    def to_prometheus(self, prefix: str = "repro_serve") -> str:
+        """The registry in Prometheus/OpenMetrics text exposition format.
+
+        Counters get the conventional ``_total`` suffix; histograms render
+        their log2 buckets as the cumulative ``le``-labelled series (upper
+        bound = ``bucket_hi``), truncated after the last occupied bucket —
+        the mandatory ``+Inf`` bucket carries the total count either way.
+        ``#`` HELP lines carry the unit (scrapers ignore them)."""
+        lines: list[str] = []
+        for key, c in sorted(self._counters.items()):
+            n = _prom_name(prefix, key) + "_total"
+            if c.unit:
+                lines.append(f"# HELP {n} ({c.unit})")
+            lines.append(f"# TYPE {n} counter")
+            lines.append(f"{n} {_prom_num(c.value)}")
+        for key, g in sorted(self._gauges.items()):
+            n = _prom_name(prefix, key)
+            if g.unit:
+                lines.append(f"# HELP {n} ({g.unit})")
+            lines.append(f"# TYPE {n} gauge")
+            lines.append(f"{n} {_prom_num(g.value)}")
+        for key, h in sorted(self._histograms.items()):
+            n = _prom_name(prefix, key)
+            if h.unit:
+                lines.append(f"# HELP {n} ({h.unit})")
+            lines.append(f"# TYPE {n} histogram")
+            last = max((i for i, c in enumerate(h.counts) if c), default=-1)
+            cum = 0
+            for i in range(last + 1):
+                cum += h.counts[i]
+                lines.append(f'{n}_bucket{{le="{_prom_num(h.bucket_hi(i))}"}}'
+                             f" {cum}")
+            lines.append(f'{n}_bucket{{le="+Inf"}} {h.count}')
+            lines.append(f"{n}_sum {_prom_num(h.sum)}")
+            lines.append(f"{n}_count {h.count}")
+        return "\n".join(lines) + "\n"

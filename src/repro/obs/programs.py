@@ -1,0 +1,233 @@
+"""Program-level cost observatory: the warmed inventory, measured live.
+
+The source paper's method is per-layer characterization — FLOP/B intensity,
+MAC utilization, memory footprint — against each accelerator's roofline.
+:class:`ProgramRegistry` is that table for the *serving* unit of execution,
+the compiled program: every jitted program in ``ServeEngine``'s warmed
+inventory registers here with its static cost (FLOPs / bytes accessed from
+the lowered HLO via :func:`~repro.utils.hlo.normalize_cost_analysis`,
+temp/argument/output bytes from the compiled executable via
+:func:`~repro.utils.hlo.normalize_memory_analysis`) and accumulates what the
+engine actually measured through its device-synchronized ``Timed`` sections
+— invocation counts and seconds.  The quotient is live per-program FLOP/s,
+bytes/s, and utilization against the ``core/accelerators`` roofline peaks,
+surfaced as the versioned ``programs`` section of ``EngineStats.summary()``.
+
+Static costs come from the ahead-of-time lowering path
+(``jit_fn.lower(args).cost_analysis()`` — no XLA compile), so registration
+is cheap; the optional memory analysis compiles the lowered program once
+(``memory=True``), which the AOT cache keeps separate from the dispatch
+cache — the engine's zero-recompile invariant is untouched either way.
+
+:meth:`ProgramRegistry.cluster_rollup` maps the measured phase totals back
+onto the owning :class:`~repro.serve.placement.PlacementPlan` clusters so
+per-cluster measured-vs-predicted rolls into the ``obs.drift`` monitor.
+Until per-layer timing exists, a phase's measured seconds are attributed to
+clusters by their *predicted* share of that phase — the attribution (which
+cluster consumed the wall time, on which Mensa accelerator) is the data; the
+per-cluster ratio is uniform within a phase by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..core.accelerators import TPU_V5E, by_name
+from ..utils.hlo import normalize_cost_analysis, normalize_memory_analysis
+
+#: version of the ``programs`` section of ``EngineStats.summary()``
+#: (see docs/observability.md); bump on any shape change
+PROGRAMS_SCHEMA_VERSION = 1
+
+#: phases the cluster rollup attributes (the copy/KV-maintenance programs
+#: carry no plan prediction and stay out of the rollup)
+ROLLUP_PHASES = ("prefill", "decode")
+
+
+@dataclass
+class ProgramEntry:
+    """One compiled program: static cost + accumulated measurements."""
+    name: str
+    phase: str = ""                    # "prefill" | "decode" | "kv"
+    program: str = ""                  # owning jit attribute, e.g. "_prefill"
+    flops: float = 0.0                 # per invocation, from the lowered HLO
+    bytes_accessed: float = 0.0        # per invocation
+    memory: dict = field(default_factory=dict)   # normalize_memory_analysis
+    analyzed: bool = False             # static cost extraction succeeded
+    invocations: int = 0
+    measured_s: float = 0.0            # device-synchronized (Timed.dur) total
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / self.bytes_accessed if self.bytes_accessed else 0.0
+
+
+class ProgramRegistry:
+    """Registry of an engine's compiled programs with live roofline rates.
+
+    ``chip`` is the host-chip roofline the utilization figures divide by
+    (default :data:`~repro.core.accelerators.TPU_V5E`, the repo's analytic
+    reference); ``plan_summary`` is the owning ``PlacementPlan.summary()``
+    dict the cluster rollup attributes against (optional)."""
+
+    def __init__(self, chip=TPU_V5E, plan_summary: dict | None = None):
+        self.chip = chip
+        self.plan = plan_summary or {}
+        self._entries: dict[str, ProgramEntry] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def entry(self, name: str) -> ProgramEntry | None:
+        return self._entries.get(name)
+
+    def register(self, name: str, fn, args, *, phase: str,
+                 program: str = "", memory: bool = False) -> ProgramEntry:
+        """Register one program with the static cost of its lowered HLO.
+
+        ``fn`` is the jitted callable, ``args`` the exact call arguments (or
+        ``jax.ShapeDtypeStruct`` trees) — lowering only reads avals, so live
+        (even about-to-be-donated) arrays are fine.  ``memory=True``
+        additionally AOT-compiles the lowering for its
+        ``memory_analysis()`` watermarks.  Cost extraction degrades
+        gracefully (entry stays un-``analyzed``) on backends without the
+        analyses; registration itself never raises into the serving path."""
+        e = self._entries.setdefault(name, ProgramEntry(name))
+        e.phase, e.program = phase, program
+        try:
+            lowered = fn.lower(*args)
+            cost = normalize_cost_analysis(lowered.cost_analysis())
+            e.flops = float(cost.get("flops", 0.0))
+            e.bytes_accessed = float(cost.get("bytes accessed", 0.0))
+            e.analyzed = True
+            if memory:
+                e.memory = normalize_memory_analysis(
+                    lowered.compile().memory_analysis())
+        except Exception:               # noqa: BLE001 — observability must
+            pass                        # never take the serving path down
+        return e
+
+    def observe(self, name: str, dur: float, *, phase: str = "",
+                program: str = "") -> None:
+        """Accumulate one device-synchronized invocation (``Timed.dur``)."""
+        e = self._entries.get(name)
+        if e is None:
+            e = self._entries[name] = ProgramEntry(name, phase=phase,
+                                                   program=program)
+        e.invocations += 1
+        e.measured_s += dur
+
+    def reset_observed(self) -> None:
+        """Zero the dynamic accumulators; static registration survives
+        (mirrors ``ServeEngine.reset_stats``)."""
+        for e in self._entries.values():
+            e.invocations = 0
+            e.measured_s = 0.0
+
+    def temp_bytes_peak(self) -> int:
+        """High-water compiled temp memory across the inventory (0 until a
+        program was registered with ``memory=True``)."""
+        return max((int(e.memory.get("temp_size_in_bytes", 0))
+                    for e in self._entries.values()), default=0)
+
+    def phase_totals(self) -> dict:
+        """Per-phase sums over the inventory: measured seconds and total
+        executed FLOPs/bytes (static cost x invocations)."""
+        out: dict = {}
+        for e in self._entries.values():
+            t = out.setdefault(e.phase or "?", {"measured_s": 0.0,
+                                                "flops": 0.0, "bytes": 0.0,
+                                                "invocations": 0})
+            t["measured_s"] += e.measured_s
+            t["flops"] += e.flops * e.invocations
+            t["bytes"] += e.bytes_accessed * e.invocations
+            t["invocations"] += e.invocations
+        return out
+
+    def cluster_rollup(self) -> dict:
+        """Measured phase time attributed to the plan's clusters.
+
+        Each cluster's policy predicted its share of a phase
+        (``predicted_prefill_s`` / ``predicted_decode_s``); the measured
+        phase total splits by those shares, and the cluster's attributed
+        FLOP/s divides by its designated Mensa accelerator's peak — the
+        paper's per-cluster characterization, live.  Empty without a plan
+        (fixed engines) or before anything ran."""
+        policies = self.plan.get("policies") or []
+        if not policies:
+            return {}
+        totals = self.phase_totals()
+        pred_key = {"prefill": "predicted_prefill_s",
+                    "decode": "predicted_decode_s"}
+        out: dict = {}
+        for ph in ROLLUP_PHASES:
+            meas = totals.get(ph)
+            total_pred = sum(p.get(pred_key[ph]) or 0.0 for p in policies)
+            if not meas or not meas["measured_s"] or total_pred <= 0:
+                continue
+            for pol in policies:
+                pred = pol.get(pred_key[ph]) or 0.0
+                if pred <= 0:
+                    continue
+                share = pred / total_pred
+                measured = share * meas["measured_s"]
+                flops = share * meas["flops"]
+                try:
+                    peak = by_name(pol["accelerator"]).peak_flops
+                except (KeyError, TypeError):
+                    peak = 0.0
+                c = out.setdefault(str(pol["cluster"]), {
+                    "accelerator": pol.get("accelerator"),
+                    "kinds": list(pol.get("kinds") or ()),
+                })
+                c[ph] = {
+                    "share": share,
+                    "predicted_s": pred,
+                    "measured_s": measured,
+                    "ratio": measured / pred,
+                    "flops": flops,
+                    "flops_per_s": flops / measured if measured else 0.0,
+                    "utilization": (flops / measured / peak)
+                    if measured and peak else 0.0,
+                }
+        return out
+
+    def summary(self) -> dict:
+        """The versioned ``programs`` section of ``EngineStats.summary()``."""
+        programs = {}
+        for name in sorted(self._entries):
+            e = self._entries[name]
+            total_flops = e.flops * e.invocations
+            total_bytes = e.bytes_accessed * e.invocations
+            fps = total_flops / e.measured_s if e.measured_s else 0.0
+            bps = total_bytes / e.measured_s if e.measured_s else 0.0
+            rec = {
+                "phase": e.phase,
+                "program": e.program,
+                "analyzed": e.analyzed,
+                "flops": e.flops,
+                "bytes_accessed": e.bytes_accessed,
+                "arithmetic_intensity": e.arithmetic_intensity,
+                "invocations": e.invocations,
+                "measured_s": e.measured_s,
+                "flops_per_s": fps,
+                "bytes_per_s": bps,
+                "utilization": fps / self.chip.peak_flops,
+                "bandwidth_utilization": bps / self.chip.hbm_bw,
+            }
+            if e.memory:
+                rec["memory"] = dict(e.memory)
+            programs[name] = rec
+        out = {
+            "version": PROGRAMS_SCHEMA_VERSION,
+            "chip": {"name": self.chip.name,
+                     "peak_flops": self.chip.peak_flops,
+                     "hbm_bw": self.chip.hbm_bw},
+            "programs": programs,
+        }
+        peak_tmp = self.temp_bytes_peak()
+        if peak_tmp:
+            out["temp_bytes_peak"] = peak_tmp
+        clusters = self.cluster_rollup()
+        if clusters:
+            out["clusters"] = clusters
+        return out

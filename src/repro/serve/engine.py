@@ -84,7 +84,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..models.attention import PagedKVCache
 from ..models.transformer import Model
-from ..obs import MetricsRegistry, Timed, Tracer
+from ..obs import MetricsRegistry, ProgramRegistry, Timed, Tracer
 from ..obs.drift import drift_report, plan_predictions
 from .kvpool import PagedKVManager
 from .sampling import sample_tokens
@@ -173,6 +173,8 @@ class EngineStats:
     kv_peak_per_shard: list = field(default_factory=list)   # sums to peak
     # ---- placement (serve/placement.py plan summary; set by the engine) ----
     placement: dict = field(default_factory=dict)
+    # ---- program cost registry (obs/programs.py; attached by the engine) ----
+    programs: ProgramRegistry | None = None
 
     def record_ttft(self, v: float) -> None:
         self.ttft_count += 1
@@ -249,7 +251,16 @@ class EngineStats:
                 / max(self.decode_steps, 1),
             }
             p["drift"] = drift_report(plan_predictions(p), p["measured"])
+            if p["drift"] and self.programs is not None:
+                # per-cluster measured-vs-predicted: the program registry's
+                # phase totals attributed over the plan's clusters, next to
+                # the whole-engine drift the calibration gate consumes
+                clusters = self.programs.cluster_rollup()
+                if clusters:
+                    p["drift"]["clusters"] = clusters
             out["placement"] = p
+        if self.programs is not None:
+            out["programs"] = self.programs.summary()
         out["obs"] = self.metrics.to_dict()
         return out
 
@@ -291,7 +302,8 @@ class ServeEngine:
                  decode_model: Model | None = None,
                  policy=None,
                  tracer: Tracer | None = None,
-                 profile: bool = False):
+                 profile: bool = False,
+                 program_memory: bool = False):
         """``greedy`` is a legacy knob: sampling is now per-request
         (Request.temperature/top_k/top_p/seed) and greedy stays the exact
         default, so both values are accepted and equivalent.
@@ -332,7 +344,13 @@ class ServeEngine:
         ``tracer``: a :class:`repro.obs.Tracer`; default is a fresh enabled
         one (pass ``Tracer(enabled=False)`` to opt out).  ``profile=True``
         wraps each timed section in a ``jax.profiler.TraceAnnotation`` so
-        XLA profiles line up with engine spans."""
+        XLA profiles line up with engine spans.
+
+        ``program_memory=True`` additionally AOT-compiles each program at
+        warmup for its ``memory_analysis()`` temp/argument/output watermarks
+        in the ``programs`` stats section (roughly doubles warmup compile
+        time; the static FLOPs/bytes cost registry is on either way and
+        costs one extra lowering per program)."""
         del greedy                      # superseded by per-request sampling
         self.tracer = tracer if tracer is not None else Tracer()
         self.profile = profile
@@ -472,6 +490,16 @@ class ServeEngine:
             self.tracer.set_track(1 + s, f"slot {s}")
         self._trk_engine = 1 + slots
         self.tracer.set_track(self._trk_engine, "engine")
+        # ------------------------------------------- program cost registry
+        self.programs = ProgramRegistry(plan_summary=self.policy.summary())
+        self._program_memory = program_memory
+        # static device-memory telemetry: the state tree realizes
+        # serve_state_specs, so its leaf sizes ARE the per-slot footprint;
+        # paged K/V leaves belong to the pool, everything else to the slots
+        pool_bytes, state_bytes = self._state_byte_stats()
+        self._slot_state_bytes = state_bytes // slots
+        if self.kv is not None:
+            self.kv.set_block_bytes(pool_bytes // self.kv.pool.num_blocks)
         self.stats = EngineStats()
         self._init_kv_stats()
 
@@ -500,17 +528,38 @@ class ServeEngine:
 
         return spec
 
+    def _state_byte_stats(self) -> tuple[int, int]:
+        """(paged pool K/V bytes, per-slot state bytes) of the state tree."""
+        pool_b = state_b = 0
+        for leaf in jax.tree.leaves(self.states, is_leaf=_is_paged):
+            if _is_paged(leaf):
+                pool_b += leaf.k.nbytes + leaf.v.nbytes
+            elif hasattr(leaf, "nbytes"):
+                state_b += leaf.nbytes
+        return pool_b, state_b
+
     def _init_kv_stats(self) -> None:
         if self.kv is not None:
             self.stats.kv_pool_blocks = self.kv.pool.num_blocks
             self.stats.kv_block_size = self.kv.block_size
             self.stats.kv_shards = self.kv.shards
         self.stats.placement = self.policy.summary()
+        self.stats.programs = self.programs
+        # static memory gauges (the per-tick values update in _tick_counters)
+        m = self.stats.metrics
+        m.gauge("slot_state_bytes", "bytes").set(self._slot_state_bytes)
+        if self.kv is not None:
+            m.gauge("kv_pool_capacity_bytes", "bytes").set(
+                self.kv.pool.num_blocks * self.kv.block_bytes)
+        tmp = self.programs.temp_bytes_peak()
+        if tmp:
+            m.gauge("program_temp_bytes_peak", "bytes").set(tmp)
 
     def reset_stats(self) -> None:
         self.stats = EngineStats()
         if self.kv is not None:
             self.kv.reset_stats()
+        self.programs.reset_observed()
         self._init_kv_stats()
         self._sync_compile_stats()
         self._sync_kv_stats()
@@ -547,8 +596,16 @@ class ServeEngine:
         st.blocks_evicted = mgr.blocks_evicted
 
     def _tick_counters(self, ts: float, busy: int) -> None:
-        """Per-tick counter-track samples: queue depth, slot occupancy, and
-        (paged) KV-pool in-use/cached, per shard on sharded pools."""
+        """Per-tick counter-track samples (queue depth, slot occupancy,
+        paged KV-pool in-use/cached, device-memory bytes) plus the memory
+        gauges — gauges update even untraced so ``summary()`` always carries
+        the latest occupancy in bytes."""
+        m = self.stats.metrics
+        state_bytes = busy * self._slot_state_bytes
+        m.gauge("active_state_bytes", "bytes").set(state_bytes)
+        if self.kv is not None:
+            m.gauge("kv_pool_bytes", "bytes").set(self.kv.bytes_in_use)
+            m.gauge("kv_pool_bytes_peak", "bytes").set(self.kv.bytes_peak)
         tr = self.tracer
         if not tr.enabled:
             return
@@ -562,6 +619,10 @@ class ServeEngine:
                 tr.counter("kv_in_use_by_shard", ts, tuple(
                     (f"shard{i}", v)
                     for i, v in enumerate(self.kv.in_use_by_shard)))
+        series = [("slot_state", state_bytes)]
+        if self.kv is not None:
+            series.append(("kv_pool", self.kv.bytes_in_use))
+        tr.counter("device_memory_bytes", ts, tuple(series))
 
     def save_trace(self, path) -> None:
         """Write the Chrome trace-event JSON for everything traced so far,
@@ -571,6 +632,8 @@ class ServeEngine:
         other = {"obs": summary["obs"]}
         if "placement" in summary:
             other["placement"] = summary["placement"]
+        if "programs" in summary:
+            other["programs"] = summary["programs"]
         self.tracer.save(path, other_data=other)
 
     # ------------------------------------------------------------- admission
@@ -749,8 +812,14 @@ class ServeEngine:
                                      is_leaf=_is_paged)}
 
     def _run_copy(self, src: int, dst: int) -> None:
-        self.states = self._copy(self.states, jnp.asarray(src, jnp.int32),
-                                 jnp.asarray(dst, jnp.int32))
+        with self._timed("kv_copy") as tm:
+            self.states = self._copy(self.states,
+                                     jnp.asarray(src, jnp.int32),
+                                     jnp.asarray(dst, jnp.int32))
+            tm.sync(self.states)
+        self.programs.observe("copy", tm.dur, phase="kv", program="_copy")
+        self.tracer.span("kv_copy", self._trk_engine, tm.t0, tm.t1,
+                         (("src", src), ("dst", dst)))
 
     # -------------------------------------------------------- host-side args
     def _tables_for(self, slot_ids: list[int], rows: int) -> jax.Array | None:
@@ -801,6 +870,8 @@ class ServeEngine:
         st = self.stats
         st.prefill_calls += 1
         st.prefill_time_s += tm.dur
+        self.programs.observe(f"prefill[{nb}x{bucket}]", tm.dur,
+                              phase="prefill", program="_prefill")
         st.batch_counts[n] = st.batch_counts.get(n, 0) + 1
         waste = st.metrics.counter("prefill_waste_tokens", "tokens")
         for i, (slot, req) in enumerate(members):
@@ -848,6 +919,8 @@ class ServeEngine:
         st.prefill_padded_tokens += c
         st.prefill_tokens_computed += n
         st.prefill_time_s += tm.dur
+        self.programs.observe("chunk", tm.dur, phase="prefill",
+                              program="_chunk")
         st.metrics.counter("prefill_waste_tokens", "tokens").inc(c - n)
         self.tracer.span("prefill_chunk", 1 + slot, tm.t0, tm.t1,
                          (("rid", req.rid), ("offset", off), ("n", n)))
@@ -903,33 +976,46 @@ class ServeEngine:
                         jnp.zeros((n,), jnp.int32),
                         jnp.ones((n,), jnp.float32),
                         jnp.zeros((n,), jnp.int32))
+        # every program registers its static cost (lowered-HLO FLOPs/bytes,
+        # optionally compiled memory watermarks) immediately before its
+        # warmup call — same args, so the registered shape IS the warmed one
+        reg, mem = self.programs, self._program_memory
         with self._timed("warmup") as tm:
             for b in self.buckets:
                 for nb in self.batch_buckets:
-                    _, self.states = self._prefill(
-                        self.params, jnp.zeros((nb, b), jnp.int32),
-                        jnp.ones((nb,), jnp.int32),
-                        jnp.asarray(np.arange(nb) % self.slots, np.int32),
-                        self.states, self._warm_table(nb), *zs(nb))
+                    args = (self.params, jnp.zeros((nb, b), jnp.int32),
+                            jnp.ones((nb,), jnp.int32),
+                            jnp.asarray(np.arange(nb) % self.slots, np.int32),
+                            self.states, self._warm_table(nb), *zs(nb))
+                    reg.register(f"prefill[{nb}x{b}]", self._prefill, args,
+                                 phase="prefill", program="_prefill",
+                                 memory=mem)
+                    _, self.states = self._prefill(*args)
             # chunk continuation: reachable for prompts beyond the largest
             # bucket, and (paged) for any prefix-cache hit
             if self.max_len - 1 > self.buckets[-1] \
                     or (self.kv is not None and self.kv.prefix_enabled):
-                _, self.states = self._chunk(
-                    self.params,
-                    jnp.zeros((1, self.prefill_chunk), jnp.int32),
-                    jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32),
-                    jnp.asarray(0, jnp.int32), self.states,
-                    self._warm_table(1), *zs(1))
+                args = (self.params,
+                        jnp.zeros((1, self.prefill_chunk), jnp.int32),
+                        jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32),
+                        jnp.asarray(0, jnp.int32), self.states,
+                        self._warm_table(1), *zs(1))
+                reg.register("chunk", self._chunk, args, phase="prefill",
+                             program="_chunk", memory=mem)
+                _, self.states = self._chunk(*args)
             if self._copy is not None:
-                self.states = self._copy(self.states,
-                                         jnp.asarray(0, jnp.int32),
-                                         jnp.asarray(0, jnp.int32))
-            _, self.states = self._decode(
-                self.params, jnp.zeros((self.slots, 1), jnp.int32),
-                self.states, jnp.asarray(self.positions), self.memory,
-                jnp.zeros((self.slots,), bool),
-                self._warm_table(self.slots), *zs(self.slots))
+                args = (self.states, jnp.asarray(0, jnp.int32),
+                        jnp.asarray(0, jnp.int32))
+                reg.register("copy", self._copy, args, phase="kv",
+                             program="_copy", memory=mem)
+                self.states = self._copy(*args)
+            args = (self.params, jnp.zeros((self.slots, 1), jnp.int32),
+                    self.states, jnp.asarray(self.positions), self.memory,
+                    jnp.zeros((self.slots,), bool),
+                    self._warm_table(self.slots), *zs(self.slots))
+            reg.register("decode", self._decode, args, phase="decode",
+                         program="_decode", memory=mem)
+            _, self.states = self._decode(*args)
             self.states = self.model.init_states(
                 self.slots, self.max_len, **self._state_kw,
                 shardings=self._state_shardings)
@@ -941,6 +1027,13 @@ class ServeEngine:
             self.kv.clear()
         self.positions[:] = 0
         self._sync_compile_stats()
+        tmp = self.programs.temp_bytes_peak()
+        if tmp:
+            self.stats.metrics.gauge("program_temp_bytes_peak",
+                                     "bytes").set(tmp)
+            if self.tracer.enabled:
+                self.tracer.counter("program_temp_bytes", tm.t1,
+                                    (("peak", tmp),))
 
     def _warm_table(self, rows: int) -> jax.Array | None:
         """All-sentinel block tables: warmup calls drop every KV write."""
@@ -1014,6 +1107,8 @@ class ServeEngine:
         now = tm.t1
         self.stats.decode_steps += 1
         self.stats.decode_time_s += tm.dur
+        self.programs.observe("decode", tm.dur, phase="decode",
+                              program="_decode")
         self.stats.metrics.histogram("decode_tick_s").record(tm.dur)
         self.stats.metrics.histogram(
             "tokens_per_tick", base=1.0, unit="tokens").record(len(active))

@@ -316,11 +316,28 @@ class PagedKVManager:
         # bumped on every table mutation so the engine can cache the
         # device-side copy across decode ticks
         self.version = 0
+        # device bytes per physical block, set by the engine once the pool's
+        # K/V arrays exist (layer count x 2 x heads x head_dim x itemsize is
+        # the model's business, not the allocator's) — 0 until then, and the
+        # byte telemetry below reads 0 rather than guessing
+        self.block_bytes = 0
+
+    def set_block_bytes(self, n: int) -> None:
+        self.block_bytes = int(n)
 
     # ------------------------------------------------------------------ stats
     @property
     def in_use(self) -> int:
         return self.pool.in_use
+
+    @property
+    def bytes_in_use(self) -> int:
+        """Device bytes referenced by live block mappings."""
+        return self.pool.in_use * self.block_bytes
+
+    @property
+    def bytes_peak(self) -> int:
+        return self.pool.peak_in_use * self.block_bytes
 
     @property
     def cached(self) -> int:

@@ -103,6 +103,41 @@ def count_op(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
 
 
+#: the CompiledMemoryStats fields the normalized view carries (device-side
+#: sizes first; ``peak_memory_in_bytes`` exists only on some backends)
+MEMORY_FIELDS = (
+    "argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+    "alias_size_in_bytes", "generated_code_size_in_bytes",
+    "peak_memory_in_bytes",
+)
+
+
+def normalize_memory_analysis(mem) -> dict:
+    """Flatten ``compiled.memory_analysis()`` across JAX versions.
+
+    The return shape drifts like ``cost_analysis()``'s: ``None`` on backends
+    without the analysis, a ``CompiledMemoryStats`` object on current JAX, a
+    plain dict on some, a list with one entry per executable program on
+    others.  Returns one flat ``{field: int_bytes}`` dict over
+    :data:`MEMORY_FIELDS`, summing across programs; absent fields are
+    omitted, never invented as zeros."""
+    if mem is None:
+        return {}
+    entries = mem if isinstance(mem, (list, tuple)) else [mem]
+    out: dict = {}
+    for entry in entries:
+        if entry is None:
+            continue
+        get = entry.get if isinstance(entry, dict) \
+            else lambda k, e=entry: getattr(e, k, None)
+        for key in MEMORY_FIELDS:
+            val = get(key)
+            if val is None:
+                continue
+            out[key] = out.get(key, 0) + int(val)
+    return out
+
+
 def normalize_cost_analysis(cost) -> dict:
     """Flatten ``compiled.cost_analysis()`` across JAX versions.
 

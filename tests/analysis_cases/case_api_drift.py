@@ -1,8 +1,8 @@
-"""Seeded JL003 violations: raw `.cost_analysis()` access.
+"""Seeded JL003 violations: raw `.cost_analysis()` / `.memory_analysis()`.
 
 Never executed — parsed by tests/test_analysis.py only.
 """
-from repro.utils.hlo import normalize_cost_analysis
+from repro.utils.hlo import normalize_cost_analysis, normalize_memory_analysis
 
 
 def probe(compiled):
@@ -10,3 +10,10 @@ def probe(compiled):
     flops = compiled.cost_analysis()["flops"]              # expect[JL003]
     ok = normalize_cost_analysis(compiled.cost_analysis())  # routed: clean
     return cost, flops, ok
+
+
+def probe_memory(compiled):
+    mem = compiled.memory_analysis()                       # expect[JL003]
+    tmp = compiled.memory_analysis().temp_size_in_bytes    # expect[JL003]
+    ok = normalize_memory_analysis(compiled.memory_analysis())  # routed
+    return mem, tmp, ok

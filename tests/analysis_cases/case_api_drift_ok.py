@@ -1,5 +1,5 @@
 """Pragma-suppressed twin of case_api_drift.py — must lint clean."""
-from repro.utils.hlo import normalize_cost_analysis
+from repro.utils.hlo import normalize_cost_analysis, normalize_memory_analysis
 
 
 def probe(compiled):
@@ -7,3 +7,10 @@ def probe(compiled):
     flops = compiled.cost_analysis()["flops"]              # jitlint: ignore[api-drift]
     ok = normalize_cost_analysis(compiled.cost_analysis())
     return cost, flops, ok
+
+
+def probe_memory(compiled):
+    mem = compiled.memory_analysis()                       # jitlint: ignore[JL003]
+    tmp = compiled.memory_analysis().temp_size_in_bytes    # jitlint: ignore[api-drift]
+    ok = normalize_memory_analysis(compiled.memory_analysis())
+    return mem, tmp, ok

@@ -12,8 +12,11 @@ import pytest
 
 from repro.configs import reduced_config
 from repro.models import build_model
-from repro.obs import (OBS_SCHEMA_VERSION, Counter, Histogram,
-                       MetricsRegistry, Timed, Tracer)
+from repro.obs import (LEDGER_SCHEMA_VERSION, OBS_SCHEMA_VERSION,
+                       PROGRAMS_SCHEMA_VERSION, Counter, Gauge, Histogram,
+                       MetricsRegistry, ProgramRegistry, Timed, Tracer,
+                       append_record, read_ledger, trend_check)
+from repro.obs import ledger as ledger_mod
 from repro.obs.drift import (PHASES, drift_report, geomean, plan_predictions,
                              residual_factor)
 from repro.serve.engine import Request, ServeEngine
@@ -343,3 +346,317 @@ def test_engine_prefill_waste_counter():
         engine.stats.decode_steps
     assert obs["histograms"]["tokens_per_tick"]["count"] == \
         engine.stats.decode_steps
+
+
+# ------------------------------------------------------------------- gauges
+def test_gauge_last_write_wins_and_registry_section():
+    g = Gauge("pool", unit="bytes")
+    g.set(100)
+    g.set(42.5)
+    assert g.to_dict() == {"unit": "bytes", "value": 42.5}
+    reg = MetricsRegistry()
+    reg.gauge("kv_pool_bytes", "bytes").set(4096)
+    assert reg.gauge("kv_pool_bytes").value == 4096  # get-or-create
+    d = reg.to_dict()
+    assert d["version"] == OBS_SCHEMA_VERSION >= 2  # v2 added gauges
+    assert d["gauges"]["kv_pool_bytes"] == {"unit": "bytes", "value": 4096.0}
+
+
+# --------------------------------------------------------------- prometheus
+def test_prometheus_exposition_counters_and_gauges():
+    reg = MetricsRegistry()
+    reg.counter("prefill_waste_tokens", "tokens").inc(13)
+    reg.gauge("kv_pool_bytes", "bytes").set(6144)
+    text = reg.to_prometheus()
+    lines = text.splitlines()
+    assert text.endswith("\n")
+    assert "# TYPE repro_serve_prefill_waste_tokens_total counter" in lines
+    assert "repro_serve_prefill_waste_tokens_total 13" in lines
+    assert "# TYPE repro_serve_kv_pool_bytes gauge" in lines
+    assert "repro_serve_kv_pool_bytes 6144" in lines
+    # HELP lines carry the unit
+    assert "# HELP repro_serve_kv_pool_bytes (bytes)" in lines
+
+
+def test_prometheus_exposition_histogram_cumulative_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("tick", base=1.0, nbuckets=8, unit="s")
+    for v in (0.5, 1.5, 1.7, 3.0):
+        h.record(v)
+    lines = reg.to_prometheus(prefix="x").splitlines()
+    buckets = [ln for ln in lines if ln.startswith("x_tick_bucket")]
+    # bucket 0 (le=1): 1 sample; bucket 1 (le=2): +2; bucket 2 (le=4): +1
+    assert buckets == ['x_tick_bucket{le="1"} 1',
+                       'x_tick_bucket{le="2"} 3',
+                       'x_tick_bucket{le="4"} 4',
+                       'x_tick_bucket{le="+Inf"} 4']
+    assert "x_tick_sum 6.7" in lines
+    assert "x_tick_count 4" in lines
+    assert "# TYPE x_tick histogram" in lines
+
+
+def test_prometheus_name_sanitization():
+    reg = MetricsRegistry()
+    reg.counter("kv.blocks-copied", "blocks").inc(1)
+    text = reg.to_prometheus()
+    assert "repro_serve_kv_blocks_copied_total 1" in text
+    # empty prefix + leading digit gets a guard underscore
+    reg2 = MetricsRegistry()
+    reg2.gauge("2fast").set(1)
+    assert "_2fast 1" in reg2.to_prometheus(prefix="")
+
+
+# ----------------------------------------------------- memory normalization
+def test_normalize_memory_analysis_shapes():
+    from repro.utils.hlo import normalize_memory_analysis
+
+    class Stats:                       # the CompiledMemoryStats shape
+        temp_size_in_bytes = 100
+        argument_size_in_bytes = 30
+        output_size_in_bytes = 8
+        generated_code_size_in_bytes = 7
+
+    assert normalize_memory_analysis(None) == {}
+    one = normalize_memory_analysis(Stats())
+    assert one["temp_size_in_bytes"] == 100
+    assert one["argument_size_in_bytes"] == 30
+    # per-program lists sum; dict entries read the same keys; None entries
+    # are skipped
+    many = normalize_memory_analysis(
+        [Stats(), {"temp_size_in_bytes": 11, "peak_memory_in_bytes": 5},
+         None])
+    assert many["temp_size_in_bytes"] == 111
+    assert many["peak_memory_in_bytes"] == 5
+    assert many["output_size_in_bytes"] == 8
+
+
+# ----------------------------------------------------------- program registry
+def jnp_ones(shape):
+    return jax.numpy.ones(shape, jax.numpy.float32)
+
+
+def _mm(a, b):
+    return a @ b
+
+
+def _sq_sum(a):
+    return (a @ a.T).sum()
+
+
+def test_program_registry_static_cost_and_observe():
+    reg = ProgramRegistry()
+    fn = jax.jit(_mm)
+    args = (jnp_ones((8, 16)), jnp_ones((16, 4)))
+    e = reg.register("matmul", fn, args, phase="prefill", program="_prefill")
+    assert e.analyzed and e.flops > 0 and e.bytes_accessed > 0
+    assert e.arithmetic_intensity == pytest.approx(
+        e.flops / e.bytes_accessed)
+    assert e.invocations == 0 and e.measured_s == 0.0
+    reg.observe("matmul", 0.25)
+    reg.observe("matmul", 0.25)
+    s = reg.summary()
+    assert s["version"] == PROGRAMS_SCHEMA_VERSION
+    p = s["programs"]["matmul"]
+    assert p["invocations"] == 2 and p["measured_s"] == pytest.approx(0.5)
+    assert p["flops_per_s"] == pytest.approx(2 * e.flops / 0.5)
+    assert p["utilization"] == pytest.approx(
+        p["flops_per_s"] / s["chip"]["peak_flops"])
+    assert p["bandwidth_utilization"] == pytest.approx(
+        p["bytes_per_s"] / s["chip"]["hbm_bw"])
+    # reset_observed zeroes the dynamic side, keeps the static cost
+    reg.reset_observed()
+    p2 = reg.summary()["programs"]["matmul"]
+    assert p2["invocations"] == 0 and p2["measured_s"] == 0.0
+    assert p2["flops"] == p["flops"] and p2["analyzed"]
+
+
+def test_program_registry_memory_watermarks():
+    reg = ProgramRegistry()
+    fn = jax.jit(_sq_sum)
+    args = (jnp_ones((16, 16)),)
+    e = reg.register("m", fn, args, phase="decode", memory=True)
+    assert e.memory, "memory=True should AOT-compile for memory_analysis"
+    assert e.memory.get("argument_size_in_bytes", 0) > 0
+    assert reg.temp_bytes_peak() == e.memory.get("temp_size_in_bytes", 0)
+    assert reg.summary()["programs"]["m"]["memory"] == e.memory
+
+
+def test_program_registry_never_raises_into_serving():
+    reg = ProgramRegistry()
+    e = reg.register("broken", object(), (), phase="decode")
+    assert not e.analyzed and e.flops == 0.0
+    # un-analyzed entries still accumulate observations (graceful path for
+    # engines that never warmed up)
+    reg.observe("never_registered", 0.1, phase="decode", program="_decode")
+    s = reg.summary()
+    assert s["programs"]["never_registered"]["invocations"] == 1
+    assert not s["programs"]["never_registered"]["analyzed"]
+
+
+def test_program_registry_cluster_rollup_attribution():
+    from repro.core.accelerators import by_name
+    plan = {"policies": [
+        {"cluster": 2, "kinds": ["attention"], "accelerator": "pascal",
+         "predicted_prefill_s": 0.03, "predicted_decode_s": 0.001},
+        {"cluster": 3, "kinds": ["ffn"], "accelerator": "pavlov",
+         "predicted_prefill_s": 0.01, "predicted_decode_s": 0.003},
+    ]}
+    reg = ProgramRegistry(plan_summary=plan)
+    fn = jax.jit(_mm)
+    reg.register("prefill[1x16]", fn, (jnp_ones((16, 32)), jnp_ones((32, 8))),
+                 phase="prefill", program="_prefill")
+    reg.register("decode", fn, (jnp_ones((4, 32)), jnp_ones((32, 8))),
+                 phase="decode", program="_decode")
+    reg.observe("prefill[1x16]", 0.08, phase="prefill")
+    reg.observe("decode", 0.02, phase="decode")
+    roll = reg.cluster_rollup()
+    assert set(roll) == {"2", "3"}
+    # predicted shares: prefill 3:1, decode 1:3 — measured time splits along
+    # them and sums back to the phase totals
+    assert roll["2"]["prefill"]["share"] == pytest.approx(0.75)
+    assert roll["3"]["prefill"]["share"] == pytest.approx(0.25)
+    assert roll["2"]["prefill"]["measured_s"] \
+        + roll["3"]["prefill"]["measured_s"] == pytest.approx(0.08)
+    assert roll["2"]["decode"]["share"] == pytest.approx(0.25)
+    # ratio is measured/predicted per cluster; uniform within a phase by
+    # construction (documented attribution limit)
+    assert roll["2"]["prefill"]["ratio"] == pytest.approx(
+        roll["3"]["prefill"]["ratio"])
+    # utilization divides by the policy's own Mensa accelerator peak
+    c2 = roll["2"]["prefill"]
+    assert c2["utilization"] == pytest.approx(
+        c2["flops_per_s"] / by_name("pascal").peak_flops)
+    assert roll["2"]["accelerator"] == "pascal"
+    # no plan -> no rollup -> no clusters key in the summary
+    assert ProgramRegistry().cluster_rollup() == {}
+    assert "clusters" not in ProgramRegistry().summary()
+
+
+def test_engine_programs_cover_warmed_inventory_vs_jl006():
+    """The acceptance cross-check: the cost observatory's coverage equals
+    the static JL006 compile inventory — every ``self.X = jax.jit(...)`` in
+    ``ServeEngine.__init__`` (the rule's definition of a program) appears as
+    the ``program`` owner of at least one registered entry, with full static
+    cost, and the runtime-expected name set matches exactly."""
+    import ast
+    import inspect
+
+    from repro.analysis.rules.compile_inventory import _jit_value
+    from repro.serve import engine as engine_mod
+
+    tree = ast.parse(inspect.getsource(engine_mod))
+    cls = next(n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)
+               and n.name == "ServeEngine")
+    init = next(n for n in cls.body if isinstance(n, ast.FunctionDef)
+                and n.name == "__init__")
+    jl006 = set()
+    for stmt in ast.walk(init):
+        if isinstance(stmt, ast.Assign) and _jit_value(stmt.value) \
+                and isinstance(stmt.targets[0], ast.Attribute):
+            jl006.add(stmt.targets[0].attr)
+    assert jl006 == {"_prefill", "_chunk", "_copy", "_decode"}
+
+    cfg, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=64, buckets=(16,),
+                         kv_block_size=8, program_memory=True)
+    engine.warmup()
+    progs = engine.stats.summary()["programs"]["programs"]
+    expected = {f"prefill[{nb}x{b}]" for b in engine.buckets
+                for nb in engine.batch_buckets}
+    expected |= {"chunk", "copy", "decode"}   # paged + beyond-bucket prompts
+    assert set(progs) == expected
+    # 100% of the JL006 inventory owns at least one registered program
+    assert {p["program"] for p in progs.values()} == jl006
+    for name, p in progs.items():
+        assert p["analyzed"], name
+        assert p["flops"] > 0 and p["bytes_accessed"] > 0, name
+        assert p["memory"].get("argument_size_in_bytes", 0) > 0, name
+    assert engine.stats.summary()["programs"].get("temp_bytes_peak", 0) > 0
+
+
+def test_engine_memory_gauges_and_device_memory_track(tmp_path):
+    cfg, model, params = _tiny_model()
+    engine = ServeEngine(model, params, slots=2, max_len=32, buckets=(16,),
+                         kv_block_size=8)
+    engine.run([Request(rid=0, prompt=[1, 2, 3], max_new_tokens=3)])
+    g = engine.stats.summary()["obs"]["gauges"]
+    assert g["kv_pool_capacity_bytes"]["value"] > 0
+    assert g["kv_pool_bytes_peak"]["value"] > 0
+    assert g["kv_pool_bytes_peak"]["value"] \
+        <= g["kv_pool_capacity_bytes"]["value"]
+    # block-granular accounting: peak bytes = peak blocks x block bytes
+    assert g["kv_pool_bytes_peak"]["value"] == \
+        engine.stats.kv_blocks_peak * engine.kv.block_bytes
+    out = tmp_path / "t.json"
+    engine.save_trace(out)
+    doc = json.loads(out.read_text())
+    mem = [e for e in doc["traceEvents"]
+           if e["ph"] == "C" and e["name"] == "device_memory_bytes"]
+    assert mem, "no device_memory_bytes counter track in the trace"
+    assert {"slot_state", "kv_pool"} <= set(mem[0]["args"])
+    assert "programs" in doc["otherData"]
+
+
+# -------------------------------------------------------------------- ledger
+def _rec(tps, ttft, **kw):
+    return ledger_mod.make_record(arch="qwen3-0.6b", tokens_per_s=tps,
+                                  ttft_p50_ms=ttft, sha="abc123", **kw)
+
+
+def test_ledger_append_read_roundtrip(tmp_path):
+    p = tmp_path / "ledger.jsonl"
+    assert read_ledger(p) == []            # missing file is an empty history
+    r = _rec(1000.0, 20.0, prefix_hit_rate=0.5,
+             program_utilization={"decode": 1e-5})
+    assert r["version"] == LEDGER_SCHEMA_VERSION
+    append_record(p, r)
+    append_record(p, _rec(1100.0, 19.0))
+    got = read_ledger(p)
+    assert [x["tokens_per_s"] for x in got] == [1000.0, 1100.0]
+    assert got[0]["program_utilization"] == {"decode": 1e-5}
+    assert got[0]["git_sha"] == "abc123"
+    p.write_text(p.read_text() + "{not json\n")
+    with pytest.raises(ValueError, match="malformed ledger line"):
+        read_ledger(p)
+
+
+def test_ledger_trend_vacuous_then_binding(tmp_path):
+    # fewer than MIN_HISTORY prior records: vacuously ok
+    assert trend_check([]) == {"ok": True, "band": ledger_mod.DEFAULT_BAND,
+                               "runs": 0, "checks": []}
+    one = trend_check([_rec(1000, 20)])
+    assert one["ok"] and all(c["median"] is None for c in one["checks"])
+    # healthy history, healthy newcomer
+    hist = [_rec(1000 + 10 * i, 20.0) for i in range(5)]
+    ok = trend_check(hist + [_rec(1010, 21.0)])
+    assert ok["ok"] and ok["runs"] == 6
+    # the acceptance case: a synthetic regressed record fails the check
+    bad_tps = trend_check(hist + [_rec(400, 20.0)])       # < half the median
+    assert not bad_tps["ok"]
+    failed = [c for c in bad_tps["checks"] if not c["ok"]]
+    assert [c["metric"] for c in failed] == ["tokens_per_s"]
+    assert failed[0]["bound"] == pytest.approx(0.5 * 1020)
+    bad_ttft = trend_check(hist + [_rec(1010, 70.0)])     # latency tripled
+    assert not bad_ttft["ok"]
+    assert [c["metric"] for c in bad_ttft["checks"] if not c["ok"]] \
+        == ["ttft_p50_ms"]
+    # the window slides: 400-tps history long past stops dragging the median
+    assert trend_check([_rec(400, 20)] * 3
+                       + [_rec(1000, 20)] * ledger_mod.DEFAULT_WINDOW
+                       + [_rec(950, 20)])["ok"]
+    with pytest.raises(ValueError):
+        trend_check(hist, band=0.0)
+
+
+def test_ledger_cli_blocking_step(tmp_path, capsys):
+    p = tmp_path / "ledger.jsonl"
+    for r in [_rec(1000, 20), _rec(1010, 20), _rec(990, 21)]:
+        append_record(p, r)
+    assert ledger_mod.main([str(p)]) == 0
+    # a near-zero band flags even ordinary run-to-run jitter
+    assert ledger_mod.main([str(p), "--band", "0.001"]) == 1
+    capsys.readouterr()
+    append_record(p, _rec(100, 20))        # collapse: an order of magnitude
+    assert ledger_mod.main([str(p)]) == 1
+    out = capsys.readouterr().out
+    assert '"ok": false' in out

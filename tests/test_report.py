@@ -1,0 +1,96 @@
+"""Golden-rendering tests for benchmarks/report.py's serve-side subcommands.
+
+``trace`` and ``ledger`` render review-pasteable markdown from artifacts the
+serving stack writes (a Chrome trace, the perf ledger); these tests pin the
+exact rendering over tiny committed fixtures in tests/data/ — stdlib-only
+for ``trace``; ``ledger`` pulls in ``repro.obs.ledger`` (also stdlib-only),
+never jax.
+"""
+import importlib.util
+import json
+import shutil
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DATA = REPO / "tests" / "data"
+
+
+def _report_mod():
+    spec = importlib.util.spec_from_file_location(
+        "bench_report", REPO / "benchmarks" / "report.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+report = _report_mod()
+
+
+def test_trace_table_golden():
+    out = report.trace_table(DATA / "serve_trace_tiny.json")
+    assert out == "\n".join([
+        "| rid | slot | prompt | prefix hit | queue ms | prefill ms "
+        "| chunks | span ms | tokens | stalls |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+        "| 0 | slot 0 | 5 | 0 | 2.0 | 3.0 | 0 | 8.0 | 4 | 0 |",
+        "| 1 | slot 1 | 40 | 16 | 0.0 | 3.0 | 2 | 10.0 | 6 | 1 |",
+    ])
+
+
+def test_trace_table_reports_ring_drops(tmp_path):
+    doc = json.loads((DATA / "serve_trace_tiny.json").read_text())
+    doc["otherData"]["dropped_events"] = 9
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps(doc))
+    out = report.trace_table(p)
+    assert "9 events dropped by the ring buffer" in out
+
+
+def test_ledger_table_golden():
+    out = report.ledger_table(DATA / "perf_ledger_tiny.jsonl")
+    lines = out.splitlines()
+    assert lines[:5] == [
+        "| run | git sha | arch | tokens/s | TTFT p50 ms | prefix hit "
+        "| trace ovh | recompiles |",
+        "|---|---|---|---|---|---|---|---|",
+        "| 1 | deadbeef0 | qwen3-0.6b | 1000.0 | 20.0 | 0.55 | 0.010 | 0 |",
+        "| 2 | cafe00441 | qwen3-0.6b | 1010.0 | 19.0 | 0.55 | 0.020 | 0 |",
+        "| 3 | beefbeef9 | qwen3-0.6b | 990.0 | 21.0 | 0.55 | 0.015 | 0 |",
+    ]
+    # newest record vs the rolling median of its two predecessors
+    assert lines[-1] == ("trend (3 runs, band 50%): ok — "
+                         "tokens_per_s 990.0 vs median 1005.0, "
+                         "ttft_p50_ms 21.0 vs median 19.5")
+
+
+def test_ledger_table_flags_regression(tmp_path):
+    p = tmp_path / "ledger.jsonl"
+    shutil.copy(DATA / "perf_ledger_tiny.jsonl", p)
+    bad = {"arch": "qwen3-0.6b", "git_sha": "bad", "tokens_per_s": 100.0,
+           "ttft_p50_ms": 21.0, "version": 1, "ts": 0.0}
+    with p.open("a") as f:
+        f.write(json.dumps(bad) + "\n")
+    out = report.ledger_table(p)
+    assert "REGRESSED" in out
+    assert "| 4 | bad |" in out
+
+
+def test_ledger_table_empty_path(tmp_path):
+    out = report.ledger_table(tmp_path / "absent.jsonl")
+    assert out.startswith("(no ledger at")
+
+
+def test_ledger_cli_renders_committed_ledger():
+    """`report.py ledger` end-to-end over the repo's committed ledger — the
+    acceptance path: the results/perf_ledger.jsonl this repo ships must
+    actually render."""
+    import subprocess
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "report.py"), "ledger",
+         str(REPO / "results" / "perf_ledger.jsonl")],
+        capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0, proc.stderr
+    assert "### Perf ledger: run trajectory" in proc.stdout
+    assert "| run | git sha |" in proc.stdout
+    assert "trend (" in proc.stdout

@@ -28,6 +28,18 @@ Gates (all assertions, the acceptance criteria for the serving path):
     over 1-, 2-, and 8-device data-parallel meshes generate tokens identical
     to the unsharded engine, with zero recompiles after warmup and the paged
     pool's per-shard accounting summing exactly to the unsharded totals;
+  * disaggregated identity (``disagg_identity_gate``, in the default run):
+    a role-split prefill/decode ``DisaggEngine`` (KV-suitcase handoff
+    between the role pools) generates tokens bitwise-identical to the
+    interleaved engine across all three state families, with zero
+    recompiles after warmup on either role and exactly one handoff per
+    request;
+  * disaggregated serving (``--disagg``, needs >= 8 devices): on a
+    prefill-heavy trace, prefill pinned to 4 devices + decode to the other
+    4 matches the tokens of an interleaved dp=8 engine at equal device
+    count, compiles nothing after warmup on either submesh, and holds a
+    strictly better decode p99 time-between-tokens — the interference
+    number disaggregation exists to buy;
   * tracing overhead (``trace_overhead_gate``): with the ring tracer ON the
     warmed engine must hold >= 95% of its tracing-OFF tokens/s on the same
     trace, generate bitwise-identical tokens, and compile nothing new — the
@@ -375,6 +387,200 @@ def sharded_serve_gate(max_new: int = 6) -> dict:
     return out
 
 
+def disagg_identity_gate(max_new: int = 6) -> dict:
+    """Prefill/decode disaggregation must be a pure re-plumbing of the
+    interleaved engine (single-device functional split, all three state
+    families).
+
+    For each family, serves the same mixed trace — short prompts plus one
+    long enough to chunk — through an interleaved ``ServeEngine`` and a
+    ``DisaggEngine`` (role-split prefill/decode pair with KV-suitcase
+    handoff) and asserts (a) bitwise-identical generated tokens, (b) zero
+    recompiles after warmup on either role (the handoff export/import
+    programs are part of the closed warmed inventory), (c) exactly one
+    handoff per request with none left pending.  qwen3 additionally runs
+    the paged pool with the prefix cache on, so the suitcase block copy and
+    a COW'd shared prefix both cross the handoff.
+    """
+    import jax
+    from repro.configs import reduced_config
+    from repro.models import build_model
+    from repro.serve.disagg import DisaggEngine
+    from repro.serve.engine import Request, ServeEngine
+
+    out = {}
+    for arch in VERIFY_ARCHS:
+        cfg = reduced_config(arch)
+        cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        kw = dict(max_len=128, buckets=(16, 32), prefill_chunk=32)
+        if arch == "qwen3-0.6b":
+            kw.update(kv_block_size=16, kv_blocks=56)
+
+        def trace():
+            rng = np.random.RandomState(23)
+            shared = rng.randint(1, cfg.vocab_size, 20).tolist()
+            reqs = [Request(rid=i, prompt=rng.randint(
+                        1, cfg.vocab_size, n).tolist(), max_new_tokens=max_new)
+                    for i, n in enumerate([4, 11, 30, 70])]   # 70 -> chunked
+            # shared-prefix pair: on the paged engine the second admission
+            # COW-hits the first's blocks, and both then cross the handoff
+            reqs += [Request(rid=10 + i, prompt=shared + rng.randint(
+                         1, cfg.vocab_size, 3 + i).tolist(),
+                         max_new_tokens=max_new) for i in range(2)]
+            return reqs
+
+        ref = ServeEngine(model, params, slots=4, **kw)
+        ref_done = ref.run(trace())
+
+        dis = DisaggEngine(model, params, prefill_slots=2, decode_slots=4,
+                           **kw)
+        dis.warmup()
+        warm = dis.summary()
+        dis.reset_stats()
+        done = dis.run(trace())
+        s = dis.summary()
+        rec = dis.recompiles_since(warm)
+        assert [r.generated for r in done] \
+            == [r.generated for r in ref_done], (
+            f"{arch}: disaggregated serving diverged from the interleaved "
+            f"reference:\n  disagg:      {[r.generated for r in done]}\n"
+            f"  interleaved: {[r.generated for r in ref_done]}")
+        assert rec == 0, (
+            f"{arch}: {rec} recompiles after warmup across the role pair")
+        assert s["handoffs"] == len(trace()), s
+        assert s["handoffs_pending"] == 0, s
+        pre_kv = s["roles"]["prefill"].get("kv")
+        if pre_kv:
+            ref_kv = ref.stats.summary()["kv"]
+            assert pre_kv["prefix_hit_rate"] == ref_kv["prefix_hit_rate"], (
+                pre_kv, ref_kv)
+        out[arch] = {
+            "tokens_identical": True,
+            "recompiles_after_warmup": rec,
+            "handoffs": s["handoffs"],
+            "handoff_stalls": s["handoff_stalls"],
+            "per_role_tokens_per_s": s["per_role_tokens_per_s"],
+            "decode_tbt_ms": s["decode_tbt_ms"],
+        }
+    return out
+
+
+def disagg_serve_gate(max_new: int = 16) -> dict:
+    """Disaggregated-serving acceptance gate (needs >= 8 devices — force
+    them on CPU with XLA_FLAGS=--xla_force_host_platform_device_count=8).
+
+    Serves a prefill-heavy trace — long chunked prompts keep arriving while
+    short requests decode — through (a) an interleaved engine data-parallel
+    over all 8 devices and (b) a ``DisaggEngine`` with prefill pinned to 4
+    devices and decode to the other 4 (equal device count), and asserts:
+    bitwise-identical tokens, zero recompiles after warmup on either
+    submesh, every request handed off exactly once with none stranded, and
+    the disaggregated decode p99 time-between-tokens strictly better than
+    interleaved — on the interleaved engine every chunk-prefill tick
+    inflates the tick wall for all decoding slots; the dedicated decode
+    submesh never sees a prefill.
+    """
+    import jax
+    from repro.configs import reduced_config
+    from repro.launch.mesh import RoleConfig, make_role_meshes, \
+        make_serve_mesh
+    from repro.models import build_model
+    from repro.serve.disagg import DisaggEngine
+    from repro.serve.engine import Request, ServeEngine
+
+    ndev = len(jax.devices())
+    assert ndev >= 8, (
+        f"the disagg gate needs >= 8 devices, found {ndev} — on CPU run "
+        f"under XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    cfg = reduced_config("qwen3-0.6b")
+    cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    slots, max_len, bs, kv_blocks = 8, 256, 16, 120
+    buckets = (16, 32, 64)
+
+    def trace():
+        rng = np.random.RandomState(31)
+        # 6 short decode-bound requests (16 new tokens each) ...
+        reqs = [Request(rid=i, prompt=rng.randint(
+                    1, cfg.vocab_size, 5 + 3 * i).tolist(),
+                    max_new_tokens=max_new) for i in range(6)]
+        # ... + 8 long prompts that chunk at 64 wide, arriving throughout:
+        # on the interleaved engine their chunks share ticks with decode
+        reqs += [Request(rid=100 + i, prompt=rng.randint(
+                     1, cfg.vocab_size, 150 + 10 * i).tolist(),
+                     max_new_tokens=4) for i in range(8)]
+        return reqs
+
+    def common(mesh_kw):
+        return dict(max_len=max_len, buckets=buckets,
+                    kv_block_size=bs, kv_blocks=kv_blocks,
+                    max_prefill_per_step=2, **mesh_kw)
+
+    inter = ServeEngine(model, params, slots=slots,
+                        max_prefill_batch=4,
+                        **common({"mesh": make_serve_mesh(8, 1)}))
+    inter.warmup()
+    iw = inter.stats.summary()
+    assert iw["prefill_compiles"] > 0, "compile counters unavailable"
+    inter.reset_stats()
+    inter_done = inter.run(trace())
+    is_ = inter.stats.summary()
+    inter_rec = (is_["prefill_compiles"] - iw["prefill_compiles"]) \
+        + (is_["decode_compiles"] - iw["decode_compiles"])
+    assert inter_rec == 0, \
+        f"{inter_rec} recompiles on the interleaved reference"
+    inter_tbt = inter.stats.metrics.histogram("decode_tbt_s")
+
+    pm, dm = make_role_meshes(RoleConfig(prefill=4, decode=4))
+    dis = DisaggEngine(model, params, prefill_mesh=pm, decode_mesh=dm,
+                       prefill_slots=4, decode_slots=slots,
+                       max_prefill_batch=4,
+                       **common({}))
+    dis.warmup()
+    warm = dis.summary()
+    dis.reset_stats()
+    done = dis.run(trace())
+    s = dis.summary()
+    rec = dis.recompiles_since(warm)
+
+    assert [r.generated for r in done] \
+        == [r.generated for r in inter_done], (
+        "disaggregated serving diverged from the interleaved engine at "
+        "equal device count")
+    assert rec == 0, f"{rec} recompiles after warmup across the submeshes"
+    assert s["handoffs"] == len(trace()), s
+    assert s["handoffs_pending"] == 0, s
+
+    inter_p99 = inter_tbt.quantile(0.99)
+    dis_p99 = s["decode_tbt_ms"]["p99"] / 1e3
+    assert dis_p99 < inter_p99, (
+        f"disaggregation did not improve decode p99 time-between-tokens: "
+        f"{1e3 * dis_p99:.2f}ms disagg vs {1e3 * inter_p99:.2f}ms "
+        f"interleaved — chunk-prefill interference should dominate the "
+        f"interleaved tail")
+    return {
+        "devices": ndev,
+        "tokens_identical": True,
+        "recompiles_after_warmup": rec,
+        "handoffs": s["handoffs"],
+        "handoff_stalls": s["handoff_stalls"],
+        "handoff_time_s": s["handoff_time_s"],
+        "per_role_tokens_per_s": s["per_role_tokens_per_s"],
+        "decode_tbt_p99_ms": {"interleaved": 1e3 * inter_p99,
+                              "disagg": 1e3 * dis_p99,
+                              "improvement_frac":
+                                  1.0 - dis_p99 / inter_p99},
+        "decode_tbt_p50_ms": {"interleaved":
+                                  1e3 * inter_tbt.quantile(0.5),
+                              "disagg": s["decode_tbt_ms"]["p50"]},
+        "interleaved_tokens_per_s": is_["tokens_per_s"],
+        "disagg_tokens_per_s": s["tokens_per_s"],
+    }
+
+
 def trace_overhead_gate(engine, trace_fn, reps: int = 2) -> dict:
     """Tracing must cost ring-buffer tuples, not throughput.
 
@@ -482,6 +688,11 @@ def _report_metrics(report: dict) -> dict:
     overhead = report.get("trace_overhead")
     if overhead:
         out["trace_overhead_frac"] = overhead["overhead_frac"]
+    di = report.get("disagg_identity")
+    if di:
+        out["disagg_handoffs"] = sum(v["handoffs"] for v in di.values())
+        out["disagg_recompiles_after_warmup"] = sum(
+            v["recompiles_after_warmup"] for v in di.values())
     return out
 
 
@@ -503,9 +714,15 @@ def compare_to_baseline(report: dict, baseline: dict,
           cur["tokens_per_s"] >= (1.0 - tps_drop) * baseline["tokens_per_s"])
     check("recompiles_after_warmup",
           cur["recompiles_after_warmup"] <= baseline["recompiles_after_warmup"])
+    if "disagg_handoffs" in baseline:
+        # handoff count is deterministic (exactly one per request): any
+        # drift — skipped or doubled handoffs — is a lifecycle regression
+        check("disagg_handoffs",
+              cur.get("disagg_handoffs") == baseline["disagg_handoffs"])
     for name, worse_is_higher in (("prefix_hit_rate", False),
                                   ("blocks_peak", True),
-                                  ("decode_stalls", True)):
+                                  ("decode_stalls", True),
+                                  ("disagg_recompiles_after_warmup", True)):
         if name not in baseline:
             continue
         if name not in cur:
@@ -546,6 +763,12 @@ def main() -> None:
                     help="run ONLY the multi-device sharded gate (needs >= 8 "
                          "devices; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="run ONLY the disaggregated prefill/decode gate "
+                         "(needs >= 8 devices): role submeshes vs an "
+                         "interleaved engine at equal device count — token "
+                         "identity, zero recompiles, and strictly better "
+                         "decode p99 time-between-tokens")
     ap.add_argument("--trace", default="",
                     help="write the measured phase's Chrome trace-event JSON "
                          "here (open in Perfetto / chrome://tracing)")
@@ -569,14 +792,19 @@ def main() -> None:
                          "(default: repro.obs.ledger.DEFAULT_BAND)")
     args = ap.parse_args()
 
-    if args.sharded and (args.compare or args.write_baseline):
-        ap.error("--sharded is a standalone gate (token identity, not "
-                 "throughput); run --compare/--write-baseline on the "
+    if (args.sharded or args.disagg) and (args.compare
+                                          or args.write_baseline):
+        ap.error("--sharded/--disagg are standalone gates (token identity, "
+                 "not throughput); run --compare/--write-baseline on the "
                  "standard bench")
+    if args.sharded and args.disagg:
+        ap.error("--sharded and --disagg are separate standalone gates; "
+                 "run them as two invocations")
     if args.trace and args.no_trace:
         ap.error("--trace needs the tracer on; drop --no-trace")
-    if args.sharded:
-        report = {"sharded": sharded_serve_gate()}
+    if args.sharded or args.disagg:
+        report = {"sharded": sharded_serve_gate()} if args.sharded \
+            else {"disagg": disagg_serve_gate()}
         out = json.dumps(report, indent=1)
         print(out)
         if args.json:
@@ -669,6 +897,7 @@ def main() -> None:
     if not args.skip_verify:
         report["chunked_identity"] = verify_chunked_identity()
         report["policy_identity"] = policy_identity_gate()
+        report["disagg_identity"] = disagg_identity_gate()
     if not args.skip_paged:
         report["paged_prefix"] = paged_shared_prefix_gate()
     compare = None
@@ -727,7 +956,12 @@ def main() -> None:
                                       read_ledger, record_from_report,
                                       trend_check)
         lp = Path(args.ledger)
-        append_record(lp, record_from_report(report))
+        di = report.get("disagg_identity") or {}
+        roles = next((v["per_role_tokens_per_s"] for v in di.values()
+                      if v.get("per_role_tokens_per_s")), None)
+        append_record(lp, record_from_report(
+            report,
+            extra={"per_role_tokens_per_s": roles} if roles else None))
         band = args.ledger_band if args.ledger_band is not None \
             else DEFAULT_BAND
         trend = trend_check(read_ledger(lp), band=band)

@@ -6,6 +6,8 @@ devices while tests/benches must see 1.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 
@@ -57,6 +59,66 @@ def make_serve_mesh(dp: int | None = None, mp: int = 1):
                            f"have {ndev}")
     devices = np.asarray(jax.devices()[:dp * mp]).reshape(dp, mp)
     return jax.sharding.Mesh(devices, ("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class RoleConfig:
+    """Device partition for disaggregated serving: ``prefill`` data-parallel
+    ranks feed ``decode`` ranks over disjoint submeshes of one device set.
+    ``mp`` multiplies both (tensor parallelism within each role)."""
+    prefill: int
+    decode: int
+    mp: int = 1
+
+    def __post_init__(self):
+        if self.prefill < 1 or self.decode < 1 or self.mp < 1:
+            raise ValueError(f"role counts must be >= 1, got {self}")
+
+    @property
+    def devices(self) -> int:
+        return (self.prefill + self.decode) * self.mp
+
+
+def parse_roles_arg(spec: str) -> RoleConfig | None:
+    """Parse a ``--roles`` string: "off"/"none"/"" (interleaved engine) or
+    "prefill=N,decode=M" (disaggregated, N+M devices)."""
+    s = spec.strip().lower()
+    if s in ("off", "none", ""):
+        return None
+    kv = {}
+    for part in s.split(","):
+        key, eq, val = part.partition("=")
+        try:
+            if not eq:
+                raise ValueError
+            kv[key.strip()] = int(val)
+        except ValueError as e:
+            raise ValueError(f"--roles {spec!r}: expected "
+                             f"'prefill=N,decode=M' or 'off'") from e
+    unknown = set(kv) - {"prefill", "decode"}
+    if unknown or set(kv) != {"prefill", "decode"}:
+        raise ValueError(f"--roles {spec!r}: expected exactly "
+                         f"'prefill=N,decode=M' or 'off'")
+    return RoleConfig(prefill=kv["prefill"], decode=kv["decode"])
+
+
+def make_role_meshes(roles: RoleConfig):
+    """Disjoint (data, model) submeshes for the two roles: prefill takes the
+    first ``prefill*mp`` devices, decode the next ``decode*mp``.  Disjointness
+    is the point — a prefill burst cannot steal decode's cycles — so the
+    partition raises rather than oversubscribing."""
+    import numpy as np
+    devs = jax.devices()
+    if roles.devices > len(devs):
+        raise RuntimeError(f"roles {roles.prefill}+{roles.decode} (mp="
+                           f"{roles.mp}) need {roles.devices} devices, "
+                           f"have {len(devs)}")
+    n_pre = roles.prefill * roles.mp
+    pre = np.asarray(devs[:n_pre]).reshape(roles.prefill, roles.mp)
+    dec = np.asarray(devs[n_pre:n_pre + roles.decode * roles.mp]) \
+            .reshape(roles.decode, roles.mp)
+    return (jax.sharding.Mesh(pre, ("data", "model")),
+            jax.sharding.Mesh(dec, ("data", "model")))
 
 
 def parse_mesh_arg(spec: str):

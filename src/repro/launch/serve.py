@@ -16,6 +16,7 @@ from ..configs import get_config, reduced_config
 from ..core.executor import phase_profiles
 from ..models import build_model
 from ..obs import profile_trace
+from ..serve.disagg import DisaggEngine
 from ..serve.engine import Request, ServeEngine, prefill_buckets
 from ..serve.placement import ExecutionOracle, PlacementPlan
 
@@ -89,7 +90,64 @@ def build_engine(cfg, params=None, *, slots: int = 4, max_len: int = 256,
         policy=plan, program_memory=program_memory)
 
 
-def parse_args(argv=None) -> argparse.Namespace:
+def build_disagg_engine(cfg, params=None, *, roles, prefill_slots: int = 4,
+                        decode_slots: int = 4, max_len: int = 256,
+                        min_bucket: int = 16, max_bucket: int | None = None,
+                        max_prefill_per_step: int = 1,
+                        max_prefill_batch: int = 4,
+                        prefill_chunk: int | None = None,
+                        kv_block_size: int | None = None,
+                        kv_blocks: int | None = None,
+                        prefix_cache: bool = True,
+                        param_strategy: str = "tp",
+                        plan_cfg=None, profiles=None, policy="auto",
+                        program_memory: bool = False) -> DisaggEngine:
+    """The disaggregated counterpart of :func:`build_engine`: a prefill and
+    a decode engine pinned to the disjoint submeshes of ``roles`` (a
+    ``launch.mesh.RoleConfig``; None keeps the pair on the default device —
+    the functional model the identity tests drive).  Plan resolution, phase
+    profiles, and knob precedence match ``build_engine``; the plan's
+    ``role_knobs`` additionally specialize each role's buckets/chunk."""
+    from .mesh import make_role_meshes
+    pm, dm = make_role_meshes(roles) if roles is not None else (None, None)
+    plan = None
+    if isinstance(policy, PlacementPlan):
+        plan = policy
+    elif policy == "auto":
+        plan = ExecutionOracle(
+            plan_cfg or cfg, slots=decode_slots, max_len=max_len,
+            min_bucket=min_bucket, max_bucket=max_bucket,
+            mesh_axes=tuple(pm.axis_names) if pm is not None else (),
+        ).resolve()
+    elif policy != "fixed":
+        raise ValueError(f"policy must be 'auto', 'fixed', or a "
+                         f"PlacementPlan, got {policy!r}")
+    prefill_prof, decode_prof = profiles or phase_profiles(plan_cfg or cfg,
+                                                           policy=plan)
+    model = build_model(cfg)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(0))
+    prefill_cfg = prefill_prof.apply(cfg, runtime_only=True)
+    decode_cfg = decode_prof.apply(cfg, runtime_only=True)
+    buckets = None
+    if max_bucket is not None:
+        buckets = prefill_buckets(min(max_bucket, max_len), min_bucket)
+    return DisaggEngine(
+        model, params, prefill_mesh=pm, decode_mesh=dm,
+        prefill_slots=prefill_slots, decode_slots=decode_slots,
+        max_len=max_len, min_bucket=min_bucket, buckets=buckets,
+        max_prefill_per_step=max_prefill_per_step,
+        max_prefill_batch=max_prefill_batch, prefill_chunk=prefill_chunk,
+        kv_block_size=kv_block_size, kv_blocks=kv_blocks,
+        prefix_cache=prefix_cache, param_strategy=param_strategy,
+        prefill_model=build_model(prefill_cfg) if prefill_cfg != cfg else None,
+        decode_model=build_model(decode_cfg) if decode_cfg != cfg else None,
+        policy=plan, program_memory=program_memory)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The serving CLI, exposed as a function so tooling (and the
+    docs/serving.md drift-check test) can introspect the live flag set."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true")
@@ -142,6 +200,14 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--mp", type=int, default=None,
                     help="model-parallel mesh axis (overrides --mesh; Mensa "
                          "cluster tensor parallelism)")
+    ap.add_argument("--roles", default="off",
+                    help="disaggregated prefill/decode serving: "
+                         "'prefill=N,decode=M' pins each role to a disjoint "
+                         "submesh of N (resp. M) x mp devices with paged-KV "
+                         "suitcase handoff between them; 'off' (default) "
+                         "keeps the single interleaved engine; mutually "
+                         "exclusive with --mesh/--dp (tensor parallelism "
+                         "inside each role comes from --mp)")
     ap.add_argument("--param-strategy", default="tp",
                     choices=("tp", "dp", "auto"),
                     help="weight sharding template on a mesh: Mensa cluster "
@@ -177,7 +243,11 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--policy-dump", action="store_true",
                     help="print the resolved PlacementPlan as JSON and exit "
                          "without building the engine")
-    return ap.parse_args(argv)
+    return ap
+
+
+def parse_args(argv=None) -> argparse.Namespace:
+    return build_parser().parse_args(argv)
 
 
 def mesh_from_args(args):
@@ -192,13 +262,23 @@ def main(argv=None) -> None:
     args = parse_args(argv)
 
     plan_cfg = get_config(args.arch)
-    mesh = mesh_from_args(args)
+    from .mesh import parse_roles_arg
+    roles = parse_roles_arg(args.roles)
+    if roles is not None and (args.mesh != "off" or args.dp is not None):
+        raise SystemExit("--roles is mutually exclusive with --mesh/--dp: "
+                         "each role gets its own (N, mp) submesh")
+    mesh = None if roles is not None else mesh_from_args(args)
+    if roles is not None and args.mp is not None:
+        roles = type(roles)(prefill=roles.prefill, decode=roles.decode,
+                            mp=args.mp)
+    plan_axes = ("data", "model") if roles is not None \
+        else (tuple(mesh.axis_names) if mesh is not None else ())
     plan = None
     if args.policy == "auto" or args.policy_dump:
         plan = ExecutionOracle(
             plan_cfg, slots=args.slots, max_len=args.max_len,
             min_bucket=args.min_bucket, max_bucket=args.max_bucket,
-            mesh_axes=tuple(mesh.axis_names) if mesh is not None else (),
+            mesh_axes=plan_axes,
         ).resolve()
     if args.policy_dump:
         print(plan.dumps())
@@ -220,19 +300,39 @@ def main(argv=None) -> None:
     if mesh is not None:
         print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices "
               f"(param strategy {args.param_strategy})")
-    engine = build_engine(cfg, slots=args.slots, max_len=args.max_len,
-                          min_bucket=args.min_bucket,
-                          max_bucket=args.max_bucket,
-                          max_prefill_per_step=args.max_prefill_per_step,
-                          max_prefill_batch=args.max_prefill_batch,
-                          prefill_chunk=args.prefill_chunk,
-                          kv_block_size=args.kv_block_size,
-                          kv_blocks=args.kv_blocks,
-                          prefix_cache=args.prefix_cache,
-                          mesh=mesh, param_strategy=args.param_strategy,
-                          profiles=(prefill_prof, decode_prof),
-                          policy=plan if plan is not None else "fixed",
-                          program_memory=args.program_memory)
+    if roles is not None:
+        print(f"[serve] disaggregated roles: prefill {roles.prefill}x"
+              f"{roles.mp} devices, decode {roles.decode}x{roles.mp} "
+              f"devices (param strategy {args.param_strategy})")
+        engine = build_disagg_engine(
+            cfg, roles=roles, prefill_slots=args.slots,
+            decode_slots=args.slots,
+            max_len=args.max_len, min_bucket=args.min_bucket,
+            max_bucket=args.max_bucket,
+            max_prefill_per_step=args.max_prefill_per_step,
+            max_prefill_batch=args.max_prefill_batch,
+            prefill_chunk=args.prefill_chunk,
+            kv_block_size=args.kv_block_size, kv_blocks=args.kv_blocks,
+            prefix_cache=args.prefix_cache,
+            param_strategy=args.param_strategy,
+            profiles=(prefill_prof, decode_prof),
+            policy=plan if plan is not None else "fixed",
+            program_memory=args.program_memory)
+    else:
+        engine = build_engine(
+            cfg, slots=args.slots, max_len=args.max_len,
+            min_bucket=args.min_bucket,
+            max_bucket=args.max_bucket,
+            max_prefill_per_step=args.max_prefill_per_step,
+            max_prefill_batch=args.max_prefill_batch,
+            prefill_chunk=args.prefill_chunk,
+            kv_block_size=args.kv_block_size,
+            kv_blocks=args.kv_blocks,
+            prefix_cache=args.prefix_cache,
+            mesh=mesh, param_strategy=args.param_strategy,
+            profiles=(prefill_prof, decode_prof),
+            policy=plan if plan is not None else "fixed",
+            program_memory=args.program_memory)
     if args.warmup:
         engine.warmup()
     rng = np.random.RandomState(0)
@@ -260,7 +360,8 @@ def main(argv=None) -> None:
                  for i in range(args.long_prompts)]
     with profile_trace(args.profile_dir):
         engine.run(reqs)
-    summary = engine.stats.summary()
+    summary = engine.summary() if isinstance(engine, DisaggEngine) \
+        else engine.stats.summary()
     print(json.dumps(summary, indent=1))
     if args.trace:
         engine.save_trace(args.trace)
@@ -271,9 +372,12 @@ def main(argv=None) -> None:
         Path(args.metrics_json).write_text(json.dumps(summary, indent=1)
                                            + "\n")
     if args.metrics_prom:
-        Path(args.metrics_prom).write_text(
-            engine.stats.metrics.to_prometheus())
-        print(f"[serve] Prometheus metrics written to {args.metrics_prom}")
+        registry = engine.decode.stats.metrics \
+            if isinstance(engine, DisaggEngine) else engine.stats.metrics
+        Path(args.metrics_prom).write_text(registry.to_prometheus())
+        print(f"[serve] Prometheus metrics written to {args.metrics_prom}"
+              + (" (decode role's registry; the prefill role keeps its own)"
+                 if isinstance(engine, DisaggEngine) else ""))
 
 
 if __name__ == "__main__":

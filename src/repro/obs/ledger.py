@@ -79,8 +79,11 @@ def make_record(*, arch: str, tokens_per_s: float, ttft_p50_ms: float,
     return rec
 
 
-def record_from_report(report: dict, *, sha: str | None = None) -> dict:
-    """A ledger record from a ``serve_bench`` report dict."""
+def record_from_report(report: dict, *, sha: str | None = None,
+                       extra: dict | None = None) -> dict:
+    """A ledger record from a ``serve_bench`` report dict.  ``extra`` merges
+    additional fields into the record (e.g. the disaggregated run's per-role
+    tokens/s) without widening the schema for runs that lack them."""
     m = report["measure"]
     kv = report.get("paged_prefix", {}).get("kv") or {}
     overhead = report.get("trace_overhead") or {}
@@ -94,7 +97,7 @@ def record_from_report(report: dict, *, sha: str | None = None) -> dict:
         recompiles_after_warmup=report.get("recompiles_after_warmup"),
         program_utilization={name: p["utilization"]
                              for name, p in sorted(progs.items())},
-        sha=sha)
+        sha=sha, extra=extra)
 
 
 def append_record(path: Path | str, record: dict) -> None:

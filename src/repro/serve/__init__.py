@@ -1,6 +1,8 @@
-"""repro.serve — continuous-batching engine, paged KV pool, sampling."""
+"""repro.serve — continuous-batching engine, paged KV pool, sampling,
+and the disaggregated prefill/decode pair."""
+from .disagg import DisaggEngine
 from .engine import EngineStats, Request, ServeEngine
 from .kvpool import KVBlockPool, PagedKVManager, RadixPrefixCache
 
-__all__ = ["EngineStats", "Request", "ServeEngine", "KVBlockPool",
-           "PagedKVManager", "RadixPrefixCache"]
+__all__ = ["DisaggEngine", "EngineStats", "Request", "ServeEngine",
+           "KVBlockPool", "PagedKVManager", "RadixPrefixCache"]

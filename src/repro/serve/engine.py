@@ -58,6 +58,19 @@ as separate jitted programs so each lowers with its own strategy — pass
 ``prefill_model`` / ``decode_model`` built from per-phase
 ``core.executor.execution_profile`` overrides to specialize each program.
 
+Serving is optionally *disaggregated* (``role=...``): a ``role="prefill"``
+engine runs bucketed/chunked prefill only and stages finished slots for
+export; a ``role="decode"`` engine owns admission of finished prefills via
+:meth:`adopt`, which remaps fresh blocks in its own pool and scatters the
+visiting "suitcase" (the slot's state row plus its KV block contents) into
+them — a device-to-device block copy, never a re-layout.  The two roles pin
+to disjoint submeshes of one device set (``launch.mesh.make_role_meshes``),
+so a prefill burst can no longer inflate decode latency — the DistServe
+reading of the paper's one-size-fits-none argument, applied to request
+phases.  ``serve.disagg.DisaggEngine`` couples the pair.  Each role warms
+only its own closed program inventory (prefill + export vs decode + import),
+keeping zero-recompile guarantees per submesh.
+
 The engine is *observable by default* (repro/obs): every request's lifecycle
 (submit → admit → prefill/chunk → decode → stall → finish/abort) lands in a
 ring-buffered :class:`~repro.obs.Tracer` — one track per slot, per-tick
@@ -171,6 +184,12 @@ class EngineStats:
     kv_shards: int = 1
     kv_in_use_per_shard: list = field(default_factory=list)
     kv_peak_per_shard: list = field(default_factory=list)   # sums to peak
+    # ---- disaggregated handoff (role engines; all zero interleaved) ----
+    handoffs: int = 0                   # slots exported (prefill role) or
+    #                                     adopted (decode role)
+    handoff_time_s: float = 0.0         # export/import program time
+    handoff_stalls: int = 0             # adoptions deferred: no free slot or
+    #                                     no blocks on the decode pool
     # ---- placement (serve/placement.py plan summary; set by the engine) ----
     placement: dict = field(default_factory=dict)
     # ---- program cost registry (obs/programs.py; attached by the engine) ----
@@ -216,6 +235,12 @@ class EngineStats:
             "decode_compiles": self.decode_compiles,
             "wall_time_s": self.wall_time_s,
         }
+        if self.handoffs or self.handoff_stalls:
+            out["handoff"] = {
+                "handoffs": self.handoffs,
+                "handoff_time_s": self.handoff_time_s,
+                "handoff_stalls": self.handoff_stalls,
+            }
         if self.kv_pool_blocks:
             out["kv"] = {
                 "pool_blocks": self.kv_pool_blocks,
@@ -301,6 +326,8 @@ class ServeEngine:
                  prefill_model: Model | None = None,
                  decode_model: Model | None = None,
                  policy=None,
+                 role: str = "both",
+                 track_base: int = 0,
                  tracer: Tracer | None = None,
                  profile: bool = False,
                  program_memory: bool = False):
@@ -341,6 +368,16 @@ class ServeEngine:
         the plan (memory-centric clusters replicate, compute-centric ones
         take the TP templates).
 
+        ``role``: "both" (default, interleaved engine), "prefill" (runs
+        bucketed/chunked prefill only; finished slots queue on ``ready``
+        for :meth:`export_slot` + :meth:`release_handoff`), or "decode"
+        (never admits from the queue; sequences arrive via :meth:`adopt`).
+        Role engines warm only their own program inventory and carry a
+        handoff program each (export/import).  ``track_base`` offsets this
+        engine's tracer tracks so two role engines share one timeline
+        without colliding; role engines also prefix their track and counter
+        names with the role.
+
         ``tracer``: a :class:`repro.obs.Tracer`; default is a fresh enabled
         one (pass ``Tracer(enabled=False)`` to opt out).  ``profile=True``
         wraps each timed section in a ``jax.profiler.TraceAnnotation`` so
@@ -352,6 +389,11 @@ class ServeEngine:
         time; the static FLOPs/bytes cost registry is on either way and
         costs one extra lowering per program)."""
         del greedy                      # superseded by per-request sampling
+        if role not in ("both", "prefill", "decode"):
+            raise ValueError(f"role {role!r} not in "
+                             f"('both', 'prefill', 'decode')")
+        self.role = role
+        self.track_base = track_base
         self.tracer = tracer if tracer is not None else Tracer()
         self.profile = profile
         self.model = model
@@ -461,12 +503,13 @@ class ServeEngine:
         # choice could differ from the input placement and the next call
         # would recompile on the changed sharding.
         if mesh is None:
-            out_sh = dict(decode=None, prefill=None, chunk=None, copy=None)
+            out_sh = dict(decode=None, prefill=None, chunk=None, copy=None,
+                          export=None, imp=None)
         else:
             repl = NamedSharding(mesh, PartitionSpec())
             st = self._state_shardings
             out_sh = dict(decode=(repl, st), prefill=(repl, st),
-                          chunk=(repl, st), copy=st)
+                          chunk=(repl, st), copy=st, export=repl, imp=st)
         self._decode = jax.jit(self._decode_and_sample, donate_argnums=(2,),
                                out_shardings=out_sh["decode"])
         self._prefill = jax.jit(self._prefill_and_splice,
@@ -477,19 +520,36 @@ class ServeEngine:
         self._copy = jax.jit(self._copy_blocks, donate_argnums=(0,),
                              out_shardings=out_sh["copy"]) \
             if self.kv is not None else None
+        # disaggregated handoff pair (role engines only): export packs a slot
+        # into a self-contained suitcase replicated on the prefill submesh,
+        # import scatters a visiting suitcase into this engine's pool
+        self._export = jax.jit(self._export_slot,
+                               out_shardings=out_sh["export"]) \
+            if role == "prefill" else None
+        self._import = jax.jit(self._import_slot, donate_argnums=(0,),
+                               out_shardings=out_sh["imp"]) \
+            if role == "decode" else None
         self._queue: deque[Request] = deque()
         self._prefilling: dict[int, int] = {}   # slot -> prompt tokens consumed
+        # prefill role: slots whose prefill finished, awaiting export by the
+        # coordinator (blocks stay pinned until release_handoff)
+        self.ready: deque[int] = deque()
         # decode-tick device caches: the full block table and sampling arrays
         # change only on admission/extension/retirement, not every tick
         self._bt_cache = None
         self._bt_version = -1
         self._samp_cache = None
-        # trace track layout: queue events, one track per slot, engine-wide
-        self.tracer.set_track(TRACK_REQUESTS, "requests")
+        # trace track layout: queue events, one track per slot, engine-wide —
+        # all offset by track_base so cooperating role engines share one
+        # tracer timeline; role engines prefix their track + counter names
+        pfx = "" if role == "both" else f"{role}/"
+        self._ctr_prefix = pfx
+        self._trk_req = track_base + TRACK_REQUESTS
+        self.tracer.set_track(self._trk_req, f"{pfx}requests")
         for s in range(slots):
-            self.tracer.set_track(1 + s, f"slot {s}")
-        self._trk_engine = 1 + slots
-        self.tracer.set_track(self._trk_engine, "engine")
+            self.tracer.set_track(self._slot_track(s), f"{pfx}slot {s}")
+        self._trk_engine = track_base + 1 + slots
+        self.tracer.set_track(self._trk_engine, f"{pfx}engine")
         # ------------------------------------------- program cost registry
         self.programs = ProgramRegistry(plan_summary=self.policy.summary())
         self._program_memory = program_memory
@@ -506,6 +566,10 @@ class ServeEngine:
     def _timed(self, name: str) -> Timed:
         """A Timed section on the tracer's clock (one shared timeline)."""
         return Timed(name, profile=self.profile, clock=self.tracer.clock)
+
+    def _slot_track(self, slot: int) -> int:
+        """Tracer track id of ``slot`` (track_base-relative)."""
+        return self.track_base + 1 + slot
 
     def _make_gather_spec(self):
         """``batch -> NamedSharding`` routing the paged ops' gathered K/V
@@ -572,8 +636,8 @@ class ServeEngine:
                 return 0
             return getattr(fn, "_cache_size", lambda: 0)()
         self.stats.prefill_compiles = size(self._prefill) \
-            + size(self._chunk) + size(self._copy)
-        self.stats.decode_compiles = size(self._decode)
+            + size(self._chunk) + size(self._copy) + size(self._export)
+        self.stats.decode_compiles = size(self._decode) + size(self._import)
 
     def _sync_kv_stats(self) -> None:
         if self.kv is None:
@@ -606,23 +670,23 @@ class ServeEngine:
         if self.kv is not None:
             m.gauge("kv_pool_bytes", "bytes").set(self.kv.bytes_in_use)
             m.gauge("kv_pool_bytes_peak", "bytes").set(self.kv.bytes_peak)
-        tr = self.tracer
+        tr, p = self.tracer, self._ctr_prefix
         if not tr.enabled:
             return
-        tr.counter("queue_depth", ts, (("queued", len(self._queue)),))
-        tr.counter("slots", ts, (("busy", busy),
-                                 ("free", self.slots - busy)))
+        tr.counter(p + "queue_depth", ts, (("queued", len(self._queue)),))
+        tr.counter(p + "slots", ts, (("busy", busy),
+                                     ("free", self.slots - busy)))
         if self.kv is not None:
-            tr.counter("kv_blocks", ts, (("in_use", self.kv.in_use),
-                                         ("cached", self.kv.cached)))
+            tr.counter(p + "kv_blocks", ts, (("in_use", self.kv.in_use),
+                                             ("cached", self.kv.cached)))
             if self.kv.shards > 1:
-                tr.counter("kv_in_use_by_shard", ts, tuple(
+                tr.counter(p + "kv_in_use_by_shard", ts, tuple(
                     (f"shard{i}", v)
                     for i, v in enumerate(self.kv.in_use_by_shard)))
         series = [("slot_state", state_bytes)]
         if self.kv is not None:
             series.append(("kv_pool", self.kv.bytes_in_use))
-        tr.counter("device_memory_bytes", ts, tuple(series))
+        tr.counter(p + "device_memory_bytes", ts, tuple(series))
 
     def save_trace(self, path) -> None:
         """Write the Chrome trace-event JSON for everything traced so far,
@@ -655,7 +719,7 @@ class ServeEngine:
         if req.top_k < 0:
             raise ValueError("top_k must be >= 0 (0 = no top-k filter)")
         req.t_submit = self.tracer.now()
-        self.tracer.instant("submit", TRACK_REQUESTS, req.t_submit,
+        self.tracer.instant("submit", self._trk_req, req.t_submit,
                             (("rid", req.rid),
                              ("prompt_tokens", len(req.prompt))))
         self._queue.append(req)
@@ -712,13 +776,13 @@ class ServeEngine:
             self.requests[slot] = req
             self._set_sampling(slot, req)
             now = self.tracer.now()
-            self.tracer.begin(f"req {req.rid}", 1 + slot, now,
+            self.tracer.begin(f"req {req.rid}", self._slot_track(slot), now,
                               (("rid", req.rid),
                                ("prompt_tokens", len(req.prompt)),
                                ("prefix_hit_tokens", matched),
                                ("queue_wait_s", round(now - req.t_submit, 6))))
             if copy is not None:
-                self.tracer.instant("cow_copy", 1 + slot, now,
+                self.tracer.instant("cow_copy", self._slot_track(slot), now,
                                     (("rid", req.rid), ("src", copy[0]),
                                      ("dst", copy[1])))
                 self._run_copy(*copy)
@@ -821,6 +885,63 @@ class ServeEngine:
         self.tracer.span("kv_copy", self._trk_engine, tm.t0, tm.t1,
                          (("src", src), ("dst", dst)))
 
+    def _export_slot(self, pool_states, slot, table_row):
+        """Pack slot ``slot`` into a self-contained handoff suitcase: the
+        batch-1 state row (dense caches, window rings, RG-LRU/SSM carries —
+        everything ``serve_state_specs`` describes) plus, paged, the slot's
+        own KV block *contents* gathered through its block-table row.  The
+        suitcase shape depends on blocks-per-slot only, never on this pool's
+        size, so it travels between pools of different capacities.  Sentinel
+        rows (unowned tail of the table) clip to a valid block and gather
+        garbage — the import side's sentinel destination rows drop exactly
+        those writes."""
+        row = _gather_slot(pool_states, slot)
+        if self.kv is None:
+            return row
+        idx = jnp.clip(table_row, 0, self.kv.pool.num_blocks - 1)
+
+        def tail(a):
+            return a._replace(k=a.k[idx], v=a.v[idx]) if _is_paged(a) else a
+
+        def grp(a):
+            return a._replace(k=a.k[:, idx], v=a.v[:, idx]) \
+                if _is_paged(a) else a
+
+        return {"groups": jax.tree.map(grp, row["groups"], is_leaf=_is_paged),
+                "tail": jax.tree.map(tail, row["tail"], is_leaf=_is_paged)}
+
+    def _import_slot(self, pool_states, row, slot, table_row):
+        """Unpack a visiting suitcase into slot ``slot``: scatter its block
+        contents into the pool rows mapped by ``table_row`` (a device-to-
+        device block copy between pool stripes — never a re-layout), then
+        splice the batch-1 state row.  Sentinel table entries are out of
+        bounds by exactly one, so ``mode="drop"`` discards the suitcase's
+        garbage tail the same way padded prefill rows drop their writes."""
+        if self.kv is not None:
+            def tail(pool, new):
+                if _is_paged(pool):
+                    return new._replace(
+                        k=pool.k.at[table_row].set(
+                            new.k.astype(pool.k.dtype), mode="drop"),
+                        v=pool.v.at[table_row].set(
+                            new.v.astype(pool.v.dtype), mode="drop"))
+                return new
+
+            def grp(pool, new):
+                if _is_paged(pool):
+                    return new._replace(
+                        k=pool.k.at[:, table_row].set(
+                            new.k.astype(pool.k.dtype), mode="drop"),
+                        v=pool.v.at[:, table_row].set(
+                            new.v.astype(pool.v.dtype), mode="drop"))
+                return new
+
+            row = {"groups": jax.tree.map(grp, pool_states["groups"],
+                                          row["groups"], is_leaf=_is_paged),
+                   "tail": jax.tree.map(tail, pool_states["tail"],
+                                        row["tail"], is_leaf=_is_paged)}
+        return _splice_states(pool_states, row, slot)
+
     # -------------------------------------------------------- host-side args
     def _tables_for(self, slot_ids: list[int], rows: int) -> jax.Array | None:
         """(rows, blocks_per_slot) block-table rows for the given slots;
@@ -884,7 +1005,7 @@ class ServeEngine:
             st.prefill_tokens_computed += len(req.prompt)
             st.prefill_padded_tokens += bucket
             waste.inc(bucket - len(req.prompt))
-            self.tracer.span("prefill", 1 + slot, tm.t0, tm.t1,
+            self.tracer.span("prefill", self._slot_track(slot), tm.t0, tm.t1,
                              (("rid", req.rid), ("bucket", bucket),
                               ("rows", n)))
             st.record_ttft(now - req.t_submit)
@@ -893,6 +1014,8 @@ class ServeEngine:
                 self.kv.publish(slot, req.prompt)
             if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
                 self._finish(slot, now)
+            elif self.role == "prefill":
+                self._stage_ready(slot, now)
 
     def _advance_chunk(self, slot: int) -> None:
         req = self.requests[slot]
@@ -922,7 +1045,8 @@ class ServeEngine:
         self.programs.observe("chunk", tm.dur, phase="prefill",
                               program="_chunk")
         st.metrics.counter("prefill_waste_tokens", "tokens").inc(c - n)
-        self.tracer.span("prefill_chunk", 1 + slot, tm.t0, tm.t1,
+        self.tracer.span("prefill_chunk", self._slot_track(slot),
+                         tm.t0, tm.t1,
                          (("rid", req.rid), ("offset", off), ("n", n)))
         if off + n < len(req.prompt):
             self._prefilling[slot] = off + n
@@ -941,13 +1065,15 @@ class ServeEngine:
             self.kv.publish(slot, req.prompt)
         if len(req.generated) >= req.max_new_tokens or tok == req.eos_id:
             self._finish(slot, now)
+        elif self.role == "prefill":
+            self._stage_ready(slot, now)
 
     def _finish(self, slot: int, now: float) -> None:
         req = self.requests[slot]
         req.done = True
         req.aborted = False
         req.t_done = now
-        self.tracer.end(f"req {req.rid}", 1 + slot, now,
+        self.tracer.end(f"req {req.rid}", self._slot_track(slot), now,
                         (("rid", req.rid),
                          ("tokens", len(req.generated))))
         self.requests[slot] = None
@@ -960,6 +1086,100 @@ class ServeEngine:
             self.kv.finish(slot, req.prompt + req.generated[:-1])
         self.stats.requests_completed += 1
         self.stats.tokens_generated += len(req.generated)
+
+    # --------------------------------------------------------------- handoff
+    def _stage_ready(self, slot: int, now: float) -> None:
+        """Prefill role: the slot's prompt is fully prefilled and its first
+        token sampled — park it on ``ready`` for the coordinator.  The slot
+        keeps its blocks pinned until :meth:`release_handoff`; the sequence
+        was already published, so future same-prefix admissions hit it."""
+        self.ready.append(slot)
+        self.tracer.instant("prefill_done", self._slot_track(slot), now,
+                            (("rid", self.requests[slot].rid),))
+
+    def export_slot(self, slot: int):
+        """Prefill role: run the export program for a ready slot, returning
+        the suitcase (still on this engine's devices — the decode engine's
+        :meth:`stage_in` moves it)."""
+        req = self.requests[slot]
+        trow = jnp.asarray(np.asarray(self.kv.table[slot], np.int32)) \
+            if self.kv is not None else None
+        with self._timed("handoff_export") as tm:
+            out = self._export(self.states, jnp.asarray(slot, jnp.int32),
+                               trow)
+            tm.sync(out)
+        st = self.stats
+        st.handoffs += 1
+        st.handoff_time_s += tm.dur
+        self.programs.observe("export", tm.dur, phase="handoff",
+                              program="_export")
+        self.tracer.span("handoff_export", self._slot_track(slot),
+                         tm.t0, tm.t1, (("rid", req.rid),))
+        return out
+
+    def release_handoff(self, slot: int) -> None:
+        """Prefill role: the suitcase left — free the slot and its block
+        references (the prefix tree keeps the published blocks cached)."""
+        req = self.requests[slot]
+        now = self.tracer.now()
+        self.tracer.end(f"req {req.rid}", self._slot_track(slot), now,
+                        (("rid", req.rid), ("handoff", 1)))
+        self.requests[slot] = None
+        if self.kv is not None:
+            self.kv.release(slot)
+        self._sync_kv_stats()
+
+    def stage_in(self, suitcase):
+        """Decode role: land a visiting suitcase on this engine's submesh,
+        replicated — one fixed committed sharding, because the import
+        program's jit cache keys on it, and this is the single transfer
+        point warm and runtime suitcases share.  Meshless engines pass
+        through untouched: a device_put would *commit* the arrays and split
+        the cache key from the uncommitted warm path."""
+        if self.mesh is None:
+            return suitcase
+        return jax.device_put(suitcase,
+                              NamedSharding(self.mesh, PartitionSpec()))
+
+    def adopt(self, req: Request, suitcase, n_tokens: int) -> int | None:
+        """Decode role: admit a finished prefill from a peer engine — map a
+        free slot, remap fresh blocks covering its ``n_tokens`` written
+        positions (:meth:`PagedKVManager.adopt`), scatter the suitcase into
+        them, and start decoding from ``req.generated[-1]``.  Returns the
+        slot, or None — with no side effects beyond a stall counter — when
+        no slot or no blocks are free (the coordinator retries next tick)."""
+        free = [s for s in range(self.slots) if self.requests[s] is None]
+        if not free:
+            self.stats.handoff_stalls += 1
+            return None
+        slot = free[0]
+        if self.kv is not None and not self.kv.adopt(slot, n_tokens):
+            self.stats.handoff_stalls += 1
+            return None
+        trow = jnp.asarray(np.asarray(self.kv.table[slot], np.int32)) \
+            if self.kv is not None else None
+        with self._timed("handoff_import") as tm:
+            self.states = self._import(self.states, suitcase,
+                                       jnp.asarray(slot, jnp.int32), trow)
+            tm.sync(self.states)
+        st = self.stats
+        st.handoffs += 1
+        st.handoff_time_s += tm.dur
+        self.programs.observe("import", tm.dur, phase="handoff",
+                              program="_import")
+        self.requests[slot] = req
+        self.positions[slot] = n_tokens
+        self._set_sampling(slot, req)
+        now = tm.t1
+        self.tracer.begin(f"req {req.rid}", self._slot_track(slot), now,
+                          (("rid", req.rid),
+                           ("prompt_tokens", len(req.prompt))))
+        self.tracer.instant(
+            "handoff", self._slot_track(slot), now,
+            (("rid", req.rid), ("tokens", n_tokens),
+             ("blocks", self.kv.owned[slot] if self.kv is not None else 0)))
+        self._sync_kv_stats()
+        return slot
 
     # ---------------------------------------------------------------- warmup
     def warmup(self) -> None:
@@ -981,41 +1201,46 @@ class ServeEngine:
         # warmup call — same args, so the registered shape IS the warmed one
         reg, mem = self.programs, self._program_memory
         with self._timed("warmup") as tm:
-            for b in self.buckets:
-                for nb in self.batch_buckets:
-                    args = (self.params, jnp.zeros((nb, b), jnp.int32),
-                            jnp.ones((nb,), jnp.int32),
-                            jnp.asarray(np.arange(nb) % self.slots, np.int32),
-                            self.states, self._warm_table(nb), *zs(nb))
-                    reg.register(f"prefill[{nb}x{b}]", self._prefill, args,
-                                 phase="prefill", program="_prefill",
-                                 memory=mem)
-                    _, self.states = self._prefill(*args)
-            # chunk continuation: reachable for prompts beyond the largest
-            # bucket, and (paged) for any prefix-cache hit
-            if self.max_len - 1 > self.buckets[-1] \
-                    or (self.kv is not None and self.kv.prefix_enabled):
-                args = (self.params,
-                        jnp.zeros((1, self.prefill_chunk), jnp.int32),
-                        jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32),
-                        jnp.asarray(0, jnp.int32), self.states,
-                        self._warm_table(1), *zs(1))
-                reg.register("chunk", self._chunk, args, phase="prefill",
-                             program="_chunk", memory=mem)
-                _, self.states = self._chunk(*args)
-            if self._copy is not None:
-                args = (self.states, jnp.asarray(0, jnp.int32),
-                        jnp.asarray(0, jnp.int32))
-                reg.register("copy", self._copy, args, phase="kv",
-                             program="_copy", memory=mem)
-                self.states = self._copy(*args)
-            args = (self.params, jnp.zeros((self.slots, 1), jnp.int32),
-                    self.states, jnp.asarray(self.positions), self.memory,
-                    jnp.zeros((self.slots,), bool),
-                    self._warm_table(self.slots), *zs(self.slots))
-            reg.register("decode", self._decode, args, phase="decode",
-                         program="_decode", memory=mem)
-            _, self.states = self._decode(*args)
+            if self.role != "decode":
+                for b in self.buckets:
+                    for nb in self.batch_buckets:
+                        args = (self.params, jnp.zeros((nb, b), jnp.int32),
+                                jnp.ones((nb,), jnp.int32),
+                                jnp.asarray(np.arange(nb) % self.slots,
+                                            np.int32),
+                                self.states, self._warm_table(nb), *zs(nb))
+                        reg.register(f"prefill[{nb}x{b}]", self._prefill,
+                                     args, phase="prefill",
+                                     program="_prefill", memory=mem)
+                        _, self.states = self._prefill(*args)
+                # chunk continuation: reachable for prompts beyond the
+                # largest bucket, and (paged) for any prefix-cache hit
+                if self.max_len - 1 > self.buckets[-1] \
+                        or (self.kv is not None and self.kv.prefix_enabled):
+                    args = (self.params,
+                            jnp.zeros((1, self.prefill_chunk), jnp.int32),
+                            jnp.asarray(0, jnp.int32),
+                            jnp.asarray(1, jnp.int32),
+                            jnp.asarray(0, jnp.int32), self.states,
+                            self._warm_table(1), *zs(1))
+                    reg.register("chunk", self._chunk, args, phase="prefill",
+                                 program="_chunk", memory=mem)
+                    _, self.states = self._chunk(*args)
+                if self._copy is not None:
+                    args = (self.states, jnp.asarray(0, jnp.int32),
+                            jnp.asarray(0, jnp.int32))
+                    reg.register("copy", self._copy, args, phase="kv",
+                                 program="_copy", memory=mem)
+                    self.states = self._copy(*args)
+            if self.role != "prefill":
+                args = (self.params, jnp.zeros((self.slots, 1), jnp.int32),
+                        self.states, jnp.asarray(self.positions),
+                        self.memory, jnp.zeros((self.slots,), bool),
+                        self._warm_table(self.slots), *zs(self.slots))
+                reg.register("decode", self._decode, args, phase="decode",
+                             program="_decode", memory=mem)
+                _, self.states = self._decode(*args)
+            self._warm_handoff(reg, mem)
             self.states = self.model.init_states(
                 self.slots, self.max_len, **self._state_kw,
                 shardings=self._state_shardings)
@@ -1032,8 +1257,8 @@ class ServeEngine:
             self.stats.metrics.gauge("program_temp_bytes_peak",
                                      "bytes").set(tmp)
             if self.tracer.enabled:
-                self.tracer.counter("program_temp_bytes", tm.t1,
-                                    (("peak", tmp),))
+                self.tracer.counter(self._ctr_prefix + "program_temp_bytes",
+                                    tm.t1, (("peak", tmp),))
 
     def _warm_table(self, rows: int) -> jax.Array | None:
         """All-sentinel block tables: warmup calls drop every KV write."""
@@ -1041,6 +1266,31 @@ class ServeEngine:
             return None
         return jnp.full((rows, self.kv.blocks_per_slot), self.kv.sentinel,
                         jnp.int32)
+
+    def _warm_handoff(self, reg, mem) -> None:
+        """Compile this role's half of the handoff pair.  The prefill side
+        exports an idle slot through an all-sentinel table row.  The decode
+        side builds a warm suitcase eagerly from its *own* idle states (the
+        wire format's pytree structure depends on the model and blocks-per-
+        slot only, both shared with the peer), stages it through the same
+        :meth:`stage_in` path as runtime — the committed input sharding is
+        part of the jit cache key — and imports against an all-sentinel
+        destination row, so every paged write drops; the spliced garbage
+        lands in slot 0 of states that warmup re-initializes right after."""
+        wt = self._warm_table(1)
+        trow = wt[0] if wt is not None else None
+        if self._export is not None:
+            args = (self.states, jnp.asarray(0, jnp.int32), trow)
+            reg.register("export", self._export, args, phase="handoff",
+                         program="_export", memory=mem)
+            self._export(*args)
+        if self._import is not None:
+            suitcase = self.stage_in(self._export_slot(
+                self.states, jnp.asarray(0, jnp.int32), trow))
+            args = (self.states, suitcase, jnp.asarray(0, jnp.int32), trow)
+            reg.register("import", self._import, args, phase="handoff",
+                         program="_import", memory=mem)
+            self.states = self._import(*args)
 
     # ---------------------------------------------------------------- decode
     def step(self) -> None:
@@ -1051,11 +1301,14 @@ class ServeEngine:
         extend each slot's block table before the write and stall (freeze) a
         slot for the tick when the pool has no block for it."""
         t_tick = self.tracer.now()
-        for slot in list(self._prefilling):
-            self._advance_chunk(slot)
-        self._admit(self.max_prefill_per_step)
+        if self.role != "decode":
+            for slot in list(self._prefilling):
+                self._advance_chunk(slot)
+            self._admit(self.max_prefill_per_step)
         busy = [i for i, r in enumerate(self.requests) if r is not None]
-        active = [i for i in busy if i not in self._prefilling]
+        # a prefill-role engine never decodes: ready slots wait for export
+        active = [] if self.role == "prefill" \
+            else [i for i in busy if i not in self._prefilling]
         if self.kv is not None and active:
             ok = []
             for i in active:
@@ -1066,7 +1319,7 @@ class ServeEngine:
                 else:
                     self.stats.decode_stalls += 1
                     self.tracer.instant(
-                        "stall", 1 + i, self.tracer.now(),
+                        "stall", self._slot_track(i), self.tracer.now(),
                         (("rid", self.requests[i].rid),))
             if not ok and not self._prefilling:
                 # nothing can decode and nothing mid-prefill will retire:
@@ -1128,6 +1381,12 @@ class ServeEngine:
             self.kv.in_use / self.kv.pool.num_blocks
             if self.kv is not None else 0.0)
         end = self.tracer.now()
+        # time-between-tokens as a running slot experiences it: the whole
+        # tick's wall, chunk-prefill and admission interference included —
+        # on a dedicated decode submesh the tick carries only the decode
+        # program, which is exactly the latency win the --disagg gate
+        # measures (interleaved p99 carries chunk ticks; disagg p99 doesn't)
+        self.stats.metrics.histogram("decode_tbt_s").record(end - t_tick)
         self._tick_counters(end, len([r for r in self.requests
                                       if r is not None]))
         # wall time accumulates per tick so tokens_per_s stays meaningful for
@@ -1163,7 +1422,7 @@ class ServeEngine:
             t_abort = self.tracer.now()
             for r in leftovers:
                 if not r.aborted:
-                    self.tracer.instant("abort", TRACK_REQUESTS, t_abort,
+                    self.tracer.instant("abort", self._trk_req, t_abort,
                                         (("rid", r.rid),))
                 r.aborted = True
             msg = (f"run() exhausted max_steps={max_steps} with "

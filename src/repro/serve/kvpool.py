@@ -446,6 +446,20 @@ class PagedKVManager:
         self.version += 1
         return AdmitPlan(matched_tokens=matched, copy=copy)
 
+    # -------------------------------------------------------------- handoff
+    def adopt(self, slot: int, length: int) -> bool:
+        """Map fresh blocks for a sequence of ``length`` tokens arriving from
+        another engine's pool (disaggregated handoff).  Pure table remap: the
+        block *contents* land via the engine's import program, which scatters
+        the visiting suitcase into exactly the rows mapped here.  False — with
+        no side effects — when the pool cannot cover the sequence (the
+        coordinator retries next tick)."""
+        assert self.owned[slot] == 0, f"slot {slot} still holds blocks"
+        if not self.extend(slot, length):
+            self.release(slot)               # roll back partial allocation
+            return False
+        return True
+
     # ------------------------------------------------------------- decode path
     def extend(self, slot: int, length: int) -> bool:
         """Make the slot's table cover ``length`` tokens, allocating blocks

@@ -132,6 +132,16 @@ class PlacementPlan:
     predicted_prefill_s: float = 0.0  # whole model, one full prefill chunk
     predicted_decode_s: float = 0.0   # whole model, one lockstep decode step
     rule_kmeans_agreement: float = 0.0
+    # per-role engine knobs for disaggregated serving (serve/disagg.py):
+    # (("prefill", (("buckets", (...)), ("prefill_chunk", n))), ("decode", ()))
+    # — a dedicated prefill submesh has no decoders to protect, so its chunk
+    # is freed from the decode-latency bound the interleaved chunk obeys
+    role_knobs: tuple = ()
+
+    @property
+    def per_role(self) -> dict:
+        """``{"prefill": {...}, "decode": {...}}`` view of ``role_knobs``."""
+        return {role: dict(kv) for role, kv in self.role_knobs}
 
     @property
     def prefill_cfg_overrides(self) -> dict:
@@ -166,6 +176,7 @@ class PlacementPlan:
                 "decode_step_s": self.predicted_decode_s,
             },
             "rule_kmeans_agreement": self.rule_kmeans_agreement,
+            "role_knobs": {role: dict(kv) for role, kv in self.role_knobs},
         }
 
     def dumps(self, indent: int = 2) -> str:
@@ -379,6 +390,15 @@ class ExecutionOracle:
             axes = [p.sharding_axis for p in policies if p.sharding_axis]
             plan_axis = ("model" if "model" in axes else
                          (axes[0] if axes else self.mesh_axes[0]))
+        # per-role knobs for the disaggregated pair: the interleaved chunk
+        # above is bounded by the recurrent scan so a long prompt can't
+        # freeze running decoders — a dedicated prefill submesh has none, so
+        # its chunk widens to the full ladder top (fewest chunk invocations;
+        # token-identical by the chunked==unchunked prefill invariant).  The
+        # decode role takes no prefill knobs at all.
+        role_knobs = (("prefill", (("buckets", buckets),
+                                   ("prefill_chunk", buckets[-1]))),
+                      ("decode", ()))
         return PlacementPlan(
             arch=cfg.name, source="auto", backend=self.backend,
             policies=tuple(policies),
@@ -390,7 +410,8 @@ class ExecutionOracle:
             decode_overrides=tuple(sorted(decode_over.items())),
             predicted_prefill_s=_phase_cost(prefill_specs, all_kinds),
             predicted_decode_s=_phase_cost(decode_specs, all_kinds),
-            rule_kmeans_agreement=km_agreement)
+            rule_kmeans_agreement=km_agreement,
+            role_knobs=role_knobs)
 
 
 def resolve_policy(cfg: ArchConfig, **kw) -> PlacementPlan:

@@ -326,3 +326,130 @@ def test_sharded_engine_tensor_parallel_mesh():
         print("OK")
     """))
     assert "OK" in out
+
+
+@pytest.mark.parametrize("ndev", [1, 2, 8])
+def test_disagg_engine_token_identity(ndev):
+    """Role-split prefill/decode serving (a DisaggEngine moving finished
+    prefills into the decode pool by KV-suitcase handoff) must generate
+    exactly the interleaved engine's tokens across the causal, RG-LRU, and
+    Mamba SSM state families, with zero recompiles after warmup on either
+    role.  ndev=1 runs the meshless functional split; 2 and 8 pin the roles
+    to disjoint (ndev/2, 1) submeshes, so the suitcase crosses device
+    boundaries.  The 40-token prompt exceeds the largest bucket, so one
+    suitcase carries a chunk-prefilled slot."""
+    out = _run(textwrap.dedent(f"""
+        import jax, numpy as np
+        from repro.configs import reduced_config
+        from repro.launch.mesh import RoleConfig, make_role_meshes
+        from repro.models import build_model
+        from repro.serve.disagg import DisaggEngine
+        from repro.serve.engine import Request, ServeEngine
+
+        ndev = {ndev}
+        if ndev == 1:
+            pm = dm = None
+        else:
+            pm, dm = make_role_meshes(RoleConfig(prefill=ndev // 2,
+                                                 decode=ndev // 2))
+            assert set(pm.devices.flat).isdisjoint(set(dm.devices.flat))
+        for arch in ("qwen3-0.6b", "recurrentgemma-2b", "falcon-mamba-7b"):
+            cfg = reduced_config(arch)
+            cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+
+            def trace():
+                rng = np.random.RandomState(7)
+                lens = [3, 7, 12, 15, 9, 40]      # 40 -> chunked prefill
+                return [Request(rid=i,
+                                prompt=rng.randint(1, cfg.vocab_size,
+                                                   n).tolist(),
+                                max_new_tokens=4)
+                        for i, n in enumerate(lens)]
+
+            ref = ServeEngine(model, params, slots=8, max_len=64,
+                              buckets=(16,), max_prefill_per_step=4,
+                              max_prefill_batch=2).run(trace())
+            dis = DisaggEngine(model, params, prefill_mesh=pm,
+                               decode_mesh=dm, prefill_slots=4,
+                               decode_slots=8, max_len=64, buckets=(16,),
+                               max_prefill_per_step=4, max_prefill_batch=2)
+            dis.warmup()
+            w = dis.summary()
+            dis.reset_stats()
+            done = dis.run(trace())
+            s = dis.summary()
+            rec = dis.recompiles_since(w)
+            assert rec == 0, f"{{arch}}: {{rec}} recompiles after warmup"
+            assert [r.generated for r in done] \\
+                == [r.generated for r in ref], f"{{arch}} diverged"
+            assert s["handoffs"] == 6 and s["handoffs_pending"] == 0, s
+            print("FAMILY-OK", arch)
+        print("OK")
+    """))
+    assert "OK" in out
+    assert out.count("FAMILY-OK") == 3
+
+
+@pytest.mark.parametrize("ndev", [2, 8])
+def test_disagg_paged_prefix_handoff(ndev):
+    """A COW'd shared prefix admitted on the prefill role must survive the
+    suitcase block copy into the decode pool: the paged disaggregated pair
+    generates tokens identical to the interleaved paged engine, the
+    prefill-side prefix hit rate matches the interleaved one exactly, zero
+    recompiles on either submesh, and the decode pool drains to zero blocks
+    in use once every request retires."""
+    out = _run(textwrap.dedent(f"""
+        import jax, numpy as np
+        from repro.configs import reduced_config
+        from repro.launch.mesh import RoleConfig, make_role_meshes
+        from repro.models import build_model
+        from repro.serve.disagg import DisaggEngine
+        from repro.serve.engine import Request, ServeEngine
+
+        ndev = {ndev}
+        pm, dm = make_role_meshes(RoleConfig(prefill=ndev // 2,
+                                             decode=ndev // 2))
+        cfg = reduced_config("qwen3-0.6b")
+        cfg = cfg.replace(num_layers=max(2, len(cfg.block_pattern)))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        kw = dict(max_len=128, buckets=(16, 32), max_prefill_per_step=4,
+                  kv_block_size=16, kv_blocks=56)
+
+        def trace():
+            rng = np.random.RandomState(13)
+            shared = rng.randint(1, cfg.vocab_size, 40).tolist()  # 2.5 blocks
+            out = [Request(rid=i, prompt=shared + rng.randint(
+                       1, cfg.vocab_size, 2 + i).tolist(), max_new_tokens=4)
+                   for i in range(5)]
+            out += [Request(rid=100 + i, prompt=rng.randint(
+                        1, cfg.vocab_size, n).tolist(), max_new_tokens=4)
+                    for i, n in enumerate([4, 11, 30, 90])]   # 90 -> chunked
+            return out
+
+        ref = ServeEngine(model, params, slots=8, **kw)
+        ref_done = ref.run(trace())
+        ref_kv = ref.stats.summary()["kv"]
+        assert ref_kv["prefix_hit_rate"] > 0, ref_kv
+
+        dis = DisaggEngine(model, params, prefill_mesh=pm, decode_mesh=dm,
+                           prefill_slots=4, decode_slots=8, **kw)
+        dis.warmup()
+        w = dis.summary()
+        dis.reset_stats()
+        done = dis.run(trace())
+        s = dis.summary()
+        rec = dis.recompiles_since(w)
+        assert rec == 0, f"{{rec}} recompiles after warmup"
+        assert [r.generated for r in done] \\
+            == [r.generated for r in ref_done], "paged handoff diverged"
+        pre_kv = s["roles"]["prefill"]["kv"]
+        assert pre_kv["prefix_hit_rate"] == ref_kv["prefix_hit_rate"], \\
+            (pre_kv, ref_kv)
+        assert s["handoffs"] == 9 and s["handoffs_pending"] == 0, s
+        assert s["roles"]["decode"]["kv"]["blocks_in_use"] == 0, s
+        print("OK")
+    """))
+    assert "OK" in out

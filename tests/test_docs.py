@@ -1,0 +1,64 @@
+"""docs/serving.md is a drift-checked artifact: its flag tables must match
+the live ``launch/serve.py`` argparse parser exactly — every flag present,
+no stale rows, every default the ``repr`` of the parser's default.  A flag
+added without its doc row (or a doc row whose flag/default no longer
+exists) fails tier-1."""
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC = REPO / "docs" / "serving.md"
+
+# | `--flag` | `default` | consumed by | ... |
+ROW = re.compile(r"^\|\s*`(--[a-z][a-z0-9-]*)`\s*\|\s*`([^`]*)`\s*\|")
+
+
+def _doc_rows() -> dict:
+    rows = {}
+    for line in DOC.read_text().splitlines():
+        m = ROW.match(line)
+        if m:
+            assert m.group(1) not in rows, f"duplicate doc row {m.group(1)}"
+            rows[m.group(1)] = m.group(2)
+    return rows
+
+
+def _parser_flags() -> dict:
+    from repro.launch.serve import build_parser
+    out = {}
+    for a in build_parser()._actions:
+        if not a.option_strings or a.option_strings[0] == "-h":
+            continue
+        out[a.option_strings[0]] = repr(a.default)
+    return out
+
+
+def test_serving_doc_covers_every_flag():
+    doc, live = _doc_rows(), _parser_flags()
+    assert doc, f"{DOC} has no parseable flag rows"
+    missing = sorted(set(live) - set(doc))
+    stale = sorted(set(doc) - set(live))
+    assert not missing and not stale, (
+        f"docs/serving.md drifted from launch/serve.py build_parser():\n"
+        f"  undocumented flags: {missing}\n"
+        f"  stale doc rows:     {stale}\n"
+        f"add/remove the table rows in the same commit as the parser change")
+
+
+def test_serving_doc_defaults_match_parser():
+    doc, live = _doc_rows(), _parser_flags()
+    wrong = {f: (doc[f], live[f]) for f in sorted(set(doc) & set(live))
+             if doc[f] != live[f]}
+    assert not wrong, (
+        "docs/serving.md defaults drifted (doc, parser): "
+        f"{wrong} — the Default column is repr(action.default)")
+
+
+def test_docs_linked_from_readme():
+    """The two architecture/operator docs must stay reachable from the
+    README (the repo's front door)."""
+    readme = (REPO / "README.md").read_text()
+    for doc in ("docs/architecture.md", "docs/serving.md",
+                "docs/observability.md", "docs/placement.md"):
+        assert doc in readme, f"README.md no longer links {doc}"
+        assert (REPO / doc).exists(), f"{doc} missing"

@@ -554,7 +554,8 @@ def test_engine_programs_cover_warmed_inventory_vs_jl006():
         if isinstance(stmt, ast.Assign) and _jit_value(stmt.value) \
                 and isinstance(stmt.targets[0], ast.Attribute):
             jl006.add(stmt.targets[0].attr)
-    assert jl006 == {"_prefill", "_chunk", "_copy", "_decode"}
+    assert jl006 == {"_prefill", "_chunk", "_copy", "_decode",
+                     "_export", "_import"}
 
     cfg, model, params = _tiny_model()
     engine = ServeEngine(model, params, slots=2, max_len=64, buckets=(16,),
@@ -565,13 +566,32 @@ def test_engine_programs_cover_warmed_inventory_vs_jl006():
                 for nb in engine.batch_buckets}
     expected |= {"chunk", "copy", "decode"}   # paged + beyond-bucket prompts
     assert set(progs) == expected
-    # 100% of the JL006 inventory owns at least one registered program
-    assert {p["program"] for p in progs.values()} == jl006
+    # the handoff pair is role-gated to None on an interleaved engine; every
+    # other JL006 inventory entry owns at least one registered program
+    assert {p["program"] for p in progs.values()} \
+        == jl006 - {"_export", "_import"}
     for name, p in progs.items():
         assert p["analyzed"], name
         assert p["flops"] > 0 and p["bytes_accessed"] > 0, name
         assert p["memory"].get("argument_size_in_bytes", 0) > 0, name
     assert engine.stats.summary()["programs"].get("temp_bytes_peak", 0) > 0
+
+    # a role-split pair warms (and registers) each side of the handoff,
+    # completing 100% coverage of the JL006 inventory
+    role_progs = {}
+    for role in ("prefill", "decode"):
+        e = ServeEngine(model, params, slots=2, max_len=64, buckets=(16,),
+                        kv_block_size=8, program_memory=True, role=role)
+        e.warmup()
+        role_progs[role] = e.stats.summary()["programs"]["programs"]
+    exp = role_progs["prefill"]["export"]
+    imp = role_progs["decode"]["import"]
+    assert exp["program"] == "_export" and exp["analyzed"]
+    assert imp["program"] == "_import" and imp["analyzed"]
+    assert exp["bytes_accessed"] > 0 and imp["bytes_accessed"] > 0
+    covered = {p["program"] for ps in role_progs.values()
+               for p in ps.values()} | {p["program"] for p in progs.values()}
+    assert covered == jl006
 
 
 def test_engine_memory_gauges_and_device_memory_track(tmp_path):
